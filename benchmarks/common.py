@@ -1,0 +1,71 @@
+"""Shared benchmark harness: short CTR trainings + AUC eval on the
+synthetic Criteo-like stream (CriteoTB/Kaggle are not available offline —
+DESIGN.md §6.4; relative full-vs-ROBE comparisons carry over)."""
+
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.synthetic_ctr import CtrDataConfig, CtrStream
+from repro.models.recsys import RecsysConfig, forward, init_params, loss_fn
+from repro.train.metrics import auc
+from repro.train.optimizer import OptimizerConfig, make_optimizer
+from repro.train.train_loop import (TrainConfig, build_train_step,
+                                    init_state, run)
+
+# a "small industrial" vocab layout for CPU-scale benchmarks
+BENCH_VOCABS = (50_000, 20_000, 80_000, 5_000, 30_000, 1_000, 15_000, 400)
+
+
+def make_cfg(arch: str, embedding: str, z: int = 32,
+             compression: int = 1000, embed_dim: int = 16,
+             **kw) -> RecsysConfig:
+    base = dict(
+        dlrm=dict(arch="dlrm", n_dense=8, bot_mlp=(64, 16),
+                  top_mlp=(64, 1)),
+        dcn=dict(arch="dcn", cross_layers=3, dnn=(64, 64)),
+        autoint=dict(arch="autoint", attn_layers=2, attn_dim=16,
+                     attn_heads=2),
+        deepfm=dict(arch="deepfm", dnn=(64, 64)),
+        xdeepfm=dict(arch="xdeepfm", cin_layers=(32, 32), dnn=(64,)),
+        fibinet=dict(arch="fibinet", dnn=(64, 64)),
+    )[arch]
+    base.update(kw)
+    n_emb_params = sum(BENCH_VOCABS) * embed_dim
+    return RecsysConfig(
+        name=f"{arch}-{embedding}-z{z}", vocab_sizes=BENCH_VOCABS,
+        embed_dim=embed_dim, embedding=embedding,
+        robe_size=max(512, n_emb_params // compression), robe_block=z,
+        **base)
+
+
+def train_and_eval(cfg: RecsysConfig, steps: int, batch: int = 1024,
+                   lr: float = 0.05, opt_kind: str = "adagrad",
+                   eval_batches: int = 8, seed: int = 0):
+    params = init_params(jax.random.PRNGKey(seed), cfg)
+    opt = make_optimizer(OptimizerConfig(kind=opt_kind, lr=lr))
+    tc = TrainConfig(checkpoint_every=10 ** 9)
+    step_fn = build_train_step(lambda p, b: loss_fn(p, cfg, b), opt, tc)
+    state = init_state(params, opt, tc)
+    stream = CtrStream(CtrDataConfig(vocab_sizes=BENCH_VOCABS,
+                                     n_dense=cfg.n_dense,
+                                     batch_size=batch))
+    t0 = time.monotonic()
+    rep = run(state, step_fn, stream.batch_at, steps, tc)
+    state = rep.state
+    train_s = time.monotonic() - t0
+    scores, labels = [], []
+    fwd = jax.jit(lambda p, b: forward(p, cfg, b))
+    for s in range(10_000, 10_000 + eval_batches):
+        b = stream.batch_at(s)
+        jb = {k: jnp.asarray(v) for k, v in b.items()}
+        scores.append(np.asarray(fwd(state["params"], jb)))
+        labels.append(b["label"])
+    return {"auc": auc(np.concatenate(labels), np.concatenate(scores)),
+            "final_loss": rep.final_loss, "train_s": round(train_s, 1),
+            "steps": steps}

@@ -1,0 +1,49 @@
+"""Paper Table 2 (proxy scale): the MLPerf-style DLRM trains to the same
+AUC with a 1000×-compressed ROBE array, across block sizes Z ∈ {1, 8, 32}.
+
+CriteoTB itself is not available offline; this is the same comparison on
+the synthetic power-law CTR stream (absolute AUCs differ, the full-vs-ROBE
+gap is the reproduced quantity).  The paper's caveat — ROBE needs ~2×
+the iterations — is measured via steps-to-target."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import make_cfg, train_and_eval
+
+
+def steps_to_target(cfg, target_auc: float, max_steps: int,
+                    check_every: int = 80) -> int:
+    for steps in range(check_every, max_steps + 1, check_every):
+        r = train_and_eval(cfg, steps)
+        if r["auc"] >= target_auc:
+            return steps
+    return -1
+
+
+def run(steps: int = 240):
+    rows = []
+    full = train_and_eval(make_cfg("dlrm", "full"), steps)
+    rows.append({"name": "table2/full", "auc": round(full["auc"], 4),
+                 "train_s": full["train_s"]})
+    target = full["auc"] - 0.002          # paper: "same quality" bar
+    for z in (1, 8, 32):
+        r = train_and_eval(make_cfg("dlrm", "robe", z=z), steps)
+        rows.append({"name": f"table2/robe-z{z}", "auc": round(r["auc"], 4),
+                     "reached_target": bool(r["auc"] >= target),
+                     "train_s": r["train_s"]})
+    # iteration-count caveat: steps for ROBE-32 to reach the full model's bar
+    s_full = steps_to_target(make_cfg("dlrm", "full"), target, steps)
+    s_robe = steps_to_target(make_cfg("dlrm", "robe", z=32), target,
+                             int(steps * 2.5))
+    rows.append({"name": "table2/steps_to_target",
+                 "full": s_full, "robe32": s_robe,
+                 "epoch_ratio": round(s_robe / max(1, s_full), 2)
+                 if s_robe > 0 else None})
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

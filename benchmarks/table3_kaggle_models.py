@@ -1,0 +1,32 @@
+"""Paper Table 3 (proxy scale): six CTR model families × ROBE-Z at 1000×
+compression vs the original full tables, on the synthetic Kaggle-like
+stream.  Reproduced quantity: the AUC gap robe-vs-full per family and its
+stability across Z (the paper finds ≤ ~0.002 and flat in Z)."""
+
+from __future__ import annotations
+
+from benchmarks.common import make_cfg, train_and_eval
+
+MODELS = ("dlrm", "dcn", "autoint", "deepfm", "xdeepfm", "fibinet")
+
+
+def run(steps: int = 120, zs=(1, 8)):
+    rows = []
+    for m in MODELS:
+        opt = "sgd" if m == "dlrm" else "adam"     # paper appendix 6.4
+        lr = 0.5 if m == "dlrm" else 0.002
+        full = train_and_eval(make_cfg(m, "full"), steps, lr=lr,
+                              opt_kind=opt)
+        row = {"name": f"table3/{m}", "full_auc": round(full["auc"], 4)}
+        for z in zs:
+            r = train_and_eval(make_cfg(m, "robe", z=z), steps, lr=lr,
+                               opt_kind=opt)
+            row[f"robe_z{z}_auc"] = round(r["auc"], 4)
+        row["gap_z8"] = round(row["robe_z8_auc"] - row["full_auc"], 4)
+        rows.append(row)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

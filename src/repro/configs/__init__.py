@@ -1,0 +1,3 @@
+from repro.configs.registry import ArchBundle, all_arch_ids, get_arch
+
+__all__ = ["ArchBundle", "all_arch_ids", "get_arch"]

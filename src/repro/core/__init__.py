@@ -1,0 +1,6 @@
+from repro.core.robe import (RobeSpec, init_memory, robe_lookup,
+                             robe_lookup_bag, robe_slots, robe_signs)
+from repro.core.hashing import UHash
+
+__all__ = ["RobeSpec", "init_memory", "robe_lookup", "robe_lookup_bag",
+           "robe_slots", "robe_signs", "UHash"]

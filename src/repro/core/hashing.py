@@ -1,0 +1,144 @@
+"""Universal hashing for ROBE memory allocation.
+
+The paper (Eq. 1/2) uses a 2-universal family ``(A*k + B) mod P mod |M|``.
+On TPU there are no native 64-bit ints (they are emulated and slow on the
+VPU), so we implement the classic Mersenne-prime family over 31-bit digits
+with pure uint32 arithmetic:
+
+    P = 2^31 - 1  (Mersenne)
+    h(k) = ((a0*e + a1*k_hi + a2*k_lo + b) mod P) mod m
+
+where the (possibly > 2^32) element/block index ``k`` is carried exactly as a
+pair of uint32 limbs and reduced digit-wise (each 31-bit digit gets its own
+independent coefficient — the standard vector extension of the family, still
+2-universal).  All multiplies are 32x32 -> 64 built from 16-bit halves, so the
+whole hash is ~a dozen VPU integer ops per key and vectorizes trivially.
+
+This is the "light-weight replacement of a random hash function" the paper
+asks for; see DESIGN.md §6.2 for why we pin P = 2^31 - 1 rather than 2^61 - 1.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+M31 = np.uint32(0x7FFFFFFF)  # 2^31 - 1
+_M31_INT = 0x7FFFFFFF
+
+
+def mul32(a: jnp.ndarray, b: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Exact 32x32 -> 64 bit multiply using 16-bit halves. Returns (hi, lo).
+
+    Works entirely in uint32; correct for any uint32 inputs.
+    """
+    a = a.astype(jnp.uint32)
+    b = b.astype(jnp.uint32)
+    a_lo = a & 0xFFFF
+    a_hi = a >> 16
+    b_lo = b & 0xFFFF
+    b_hi = b >> 16
+
+    ll = a_lo * b_lo                       # < 2^32
+    lh = a_lo * b_hi                       # < 2^32
+    hl = a_hi * b_lo                       # < 2^32
+    hh = a_hi * b_hi                       # < 2^32
+
+    # middle = lh + hl may carry into bit 32.
+    mid = lh + hl
+    mid_carry = (mid < lh).astype(jnp.uint32)          # wraparound detect
+    lo = ll + (mid << 16)
+    lo_carry = (lo < ll).astype(jnp.uint32)
+    hi = hh + (mid >> 16) + (mid_carry << 16) + lo_carry
+    return hi, lo
+
+
+def add64(hi: jnp.ndarray, lo: jnp.ndarray, c: jnp.ndarray
+          ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(hi,lo) + c for uint32 c, with carry propagation."""
+    lo2 = lo + c.astype(jnp.uint32)
+    carry = (lo2 < lo).astype(jnp.uint32)
+    return hi + carry, lo2
+
+
+def mod_m31(hi: jnp.ndarray, lo: jnp.ndarray) -> jnp.ndarray:
+    """x mod (2^31 - 1) for x = hi * 2^32 + lo (both uint32).
+
+    Uses 2^31 ≡ 1 (mod M31)  ⇒  2^32 ≡ 2 (mod M31):
+        x ≡ 2*hi + lo (mod M31)
+    then folds the ≤ 33-bit intermediate down with (x & M31) + (x >> 31).
+    """
+    hi = hi.astype(jnp.uint32)
+    lo = lo.astype(jnp.uint32)
+    # 2*hi may wrap; track its carry bit: 2*hi = (hi << 1), carry = hi >> 31.
+    twice_hi = hi << 1
+    carry = hi >> 31                      # ∈ {0, 1}; contributes 2^32 ≡ 2
+    s = twice_hi + lo
+    s_carry = (s < twice_hi).astype(jnp.uint32)  # wrap ⇒ another 2^32 ≡ 2
+    extra = 2 * (carry + s_carry)
+    # s + extra*2^32-free correction: fold once, add extra, fold twice more.
+    x = (s & M31) + (s >> 31) + extra
+    x = (x & M31) + (x >> 31)
+    x = jnp.where(x >= M31, x - M31, x)
+    return x
+
+
+def split31(hi: jnp.ndarray, lo: jnp.ndarray
+            ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Split a 64-bit (hi,lo) value into three 31-bit digits (d2, d1, d0)."""
+    hi = hi.astype(jnp.uint32)
+    lo = lo.astype(jnp.uint32)
+    d0 = lo & M31
+    d1 = ((lo >> 31) | (hi << 1)) & M31
+    d2 = hi >> 30
+    return d2, d1, d0
+
+
+@dataclasses.dataclass(frozen=True)
+class UHash:
+    """One member of the 2-universal family, fixed by integer coefficients.
+
+    Hashes a (table_id, key64) pair to [0, m).  ``m`` must be < 2^31.
+    """
+    a_table: int
+    a2: int
+    a1: int
+    a0: int
+    b: int
+    m: int
+
+    @staticmethod
+    def draw(seed: int, m: int, salt: int = 0) -> "UHash":
+        if not (0 < m < _M31_INT):
+            raise ValueError(f"m must be in (0, 2^31-1), got {m}")
+        rs = np.random.RandomState((seed * 0x9E3779B1 + salt * 0x85EBCA77)
+                                   % (2 ** 31))
+        draw = lambda: int(rs.randint(1, _M31_INT, dtype=np.int64))
+        return UHash(a_table=draw(), a2=draw(), a1=draw(), a0=draw(),
+                     b=int(rs.randint(0, _M31_INT, dtype=np.int64)), m=m)
+
+    def __call__(self, table_id, key_hi, key_lo) -> jnp.ndarray:
+        """Vectorized hash → uint32 in [0, m)."""
+        d2, d1, d0 = split31(key_hi, key_lo)
+        acc_hi = jnp.zeros_like(d0)
+        acc_lo = jnp.full_like(d0, jnp.uint32(self.b))
+        for coeff, digit in ((self.a_table, table_id), (self.a2, d2),
+                             (self.a1, d1), (self.a0, d0)):
+            digit = jnp.asarray(digit).astype(jnp.uint32)
+            phi, plo = mul32(jnp.uint32(coeff), digit)
+            # acc += product (64-bit add)
+            lo2 = acc_lo + plo
+            carry = (lo2 < acc_lo).astype(jnp.uint32)
+            acc_lo = lo2
+            acc_hi = acc_hi + phi + carry
+        h = mod_m31(acc_hi, acc_lo)
+        return h % jnp.uint32(self.m)
+
+
+def sign_hash(h: "UHash", table_id, key_hi, key_lo) -> jnp.ndarray:
+    """±1 sign from an independent hash (parity of the M31 residue)."""
+    v = h(table_id, key_hi, key_lo)
+    return (1 - 2 * (v & 1).astype(jnp.int32)).astype(jnp.float32)

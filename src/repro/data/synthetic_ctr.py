@@ -1,0 +1,100 @@
+"""Synthetic Criteo-like CTR stream with planted, learnable structure.
+
+CriteoTB / Criteo-Kaggle are not downloadable offline (DESIGN.md §6.4), so
+the data layer generates a deterministic, step-indexed stream:
+
+* per-field categorical ids drawn from a Zipf-ish power law (the skew that
+  makes ROBE-style hashing interesting: a few hot rows, a huge cold tail);
+* labels ~ Bernoulli(σ(planted score)) where the score is a fixed random
+  per-(field, value) contribution (cheap hash-based pseudo-embedding) plus a
+  linear term on the dense features — so a model that learns per-value
+  embeddings can genuinely push AUC well above 0.5.
+
+Determinism: ``batch_at(step)`` is a pure function of (seed, step) — exactly
+what fault-tolerant resume needs (restart at step k reproduces the stream).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class CtrDataConfig:
+    vocab_sizes: Tuple[int, ...]
+    n_dense: int = 0
+    batch_size: int = 256
+    zipf_exponent: float = 1.05
+    label_temperature: float = 1.2
+    seed: int = 1234
+    multi_hot: int = 0                 # >0: bag size per field
+
+
+def _field_value_score(field: np.ndarray, value: np.ndarray,
+                       seed: int) -> np.ndarray:
+    """Deterministic pseudo-random score in [-1,1] per (field, value)."""
+    with np.errstate(over="ignore"):           # uint64 wraparound intended
+        h = (value.astype(np.uint64) * np.uint64(0x9E3779B97F4A7C15)
+             + field.astype(np.uint64) * np.uint64(0xBF58476D1CE4E5B9)
+             + np.uint64(seed % 2**32) * np.uint64(0x94D049BB133111EB))
+        h ^= h >> np.uint64(29)
+        h *= np.uint64(0xBF58476D1CE4E5B9)
+        h ^= h >> np.uint64(32)
+    return (h.astype(np.float64) / 2 ** 64) * 2.0 - 1.0
+
+
+class CtrStream:
+    """Step-indexed synthetic CTR batches (host-side, numpy)."""
+
+    def __init__(self, cfg: CtrDataConfig):
+        self.cfg = cfg
+        self._vocab = np.asarray(cfg.vocab_sizes, np.int64)
+        self._fields = np.arange(len(cfg.vocab_sizes), dtype=np.int64)
+
+    def _sample_ids(self, rs: np.random.RandomState, n: int) -> np.ndarray:
+        """Power-law ids per field via inverse-CDF on u^alpha."""
+        f = len(self._vocab)
+        u = rs.random_sample((n, f))
+        skew = u ** (1.0 / max(1e-6, self.cfg.zipf_exponent)) \
+            if self.cfg.zipf_exponent != 1.0 else u
+        # heavier head: square the uniform
+        ids = (skew * skew * self._vocab[None, :]).astype(np.int64)
+        return np.minimum(ids, self._vocab[None, :] - 1)
+
+    def batch_at(self, step: int) -> dict:
+        cfg = self.cfg
+        rs = np.random.RandomState((cfg.seed * 1_000_003 + step) % 2 ** 31)
+        n = cfg.batch_size
+        ids = self._sample_ids(rs, n)                       # [B, F]
+        score = _field_value_score(
+            np.broadcast_to(self._fields[None, :], ids.shape), ids,
+            cfg.seed).mean(axis=1) * 4.0
+        batch = {}
+        if cfg.n_dense:
+            dense = rs.randn(n, cfg.n_dense).astype(np.float32)
+            score = score + 0.3 * dense[:, :min(4, cfg.n_dense)].mean(axis=1)
+            batch["dense"] = dense
+        logits = score / cfg.label_temperature
+        prob = 1.0 / (1.0 + np.exp(-logits))
+        batch["label"] = (rs.random_sample(n) < prob).astype(np.int32)
+        batch["sparse"] = ids.astype(np.int32)
+        if cfg.multi_hot:
+            bags = np.stack([self._sample_ids(rs, n)
+                             for _ in range(cfg.multi_hot)], axis=-1)
+            batch["sparse_bag"] = bags.astype(np.int32)
+        return batch
+
+
+def retrieval_batch(cfg: CtrDataConfig, step: int, n_user_fields: int,
+                    n_candidates: int) -> dict:
+    """One query + a candidate set for retrieval-scoring cells."""
+    stream = CtrStream(cfg)
+    b = stream.batch_at(step)
+    rs = np.random.RandomState((cfg.seed * 7 + step) % 2 ** 31)
+    item_vocab = np.asarray(cfg.vocab_sizes[n_user_fields:], np.int64)
+    cand = (rs.random_sample((n_candidates, len(item_vocab)))
+            * item_vocab[None, :]).astype(np.int32)
+    return {"sparse": b["sparse"][:1], "cand_sparse": cand}

@@ -1,0 +1,77 @@
+"""Jit'd public wrappers around the Pallas kernels, with autodiff.
+
+``robe_lookup``: forward = Pallas kernel (or the jnp path on non-TPU /
+awkward shapes); backward = the paper's Fig.-2 scatter-add of output grads
+into the shared array, expressed as an XLA scatter (segment-sum over slots).
+The scatter IS the semantics of weight sharing — every aliased parameter's
+gradient accumulates into its slot.
+
+Selection logic: kernels run on TPU, or in interpret mode when
+``force_kernel``; everywhere else the pure-jnp path (same math) keeps CPU
+benchmarks fast.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.robe import RobeSpec, robe_slots, robe_signs
+from repro.core import robe as _core
+from repro.kernels import ref as _ref
+from repro.kernels.robe_lookup import robe_lookup_pallas
+from repro.kernels.dot_interaction import dot_interaction_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+# ---------------------------------------------------------------------------
+# robe_lookup with custom VJP
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
+def robe_lookup(memory: jnp.ndarray, rows: jnp.ndarray,
+                table_ids: Tuple[int, ...], dim: int, spec: RobeSpec,
+                use_kernel: bool = False) -> jnp.ndarray:
+    """[B, F] int rows -> [B, F, dim] embeddings through the ROBE array."""
+    if use_kernel:
+        return robe_lookup_pallas(memory, rows,
+                                  table_ids, dim, spec,
+                                  interpret=not _on_tpu())
+    return _ref.robe_lookup_ref(memory, rows,
+                                jnp.asarray(table_ids, jnp.uint32), dim, spec)
+
+
+def _lookup_fwd(memory, rows, table_ids, dim, spec, use_kernel):
+    out = robe_lookup(memory, rows, table_ids, dim, spec, use_kernel)
+    return out, (rows, memory.shape[0])
+
+
+def _lookup_bwd(table_ids, dim, spec, use_kernel, res, g):
+    rows, m = res
+    tids = jnp.asarray(table_ids, jnp.uint32)[None, :]
+    slots = robe_slots(spec, tids, rows, dim)            # [B, F, dim]
+    g = g.astype(jnp.float32)
+    if spec.use_sign:
+        g = g * robe_signs(spec, tids, rows, dim)
+    # scatter-add of every element's grad into its shared slot (paper Fig. 2)
+    gmem = jnp.zeros((m,), jnp.float32).at[slots.reshape(-1).astype(jnp.int32)
+                                           ].add(g.reshape(-1))
+    return gmem, None
+
+
+robe_lookup.defvjp(_lookup_fwd, _lookup_bwd)
+
+
+def dot_interaction(feats: jnp.ndarray, self_interaction: bool = False,
+                    use_kernel: bool = False) -> jnp.ndarray:
+    """[B, F, D] -> [B, F*(F±1)/2] pairwise dots (DLRM interaction)."""
+    if use_kernel:
+        return dot_interaction_pallas(feats, self_interaction,
+                                      interpret=not _on_tpu())
+    return _ref.dot_interaction_ref(feats, self_interaction)

@@ -1,0 +1,42 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth the kernels are allclose-checked
+against (tests/test_kernels.py sweeps shapes/dtypes/Z).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.robe import RobeSpec, robe_lookup as _core_lookup
+
+
+def robe_lookup_ref(memory: jnp.ndarray, rows: jnp.ndarray,
+                    table_ids: jnp.ndarray, dim: int,
+                    spec: RobeSpec) -> jnp.ndarray:
+    """[B, F] rows (+ per-field table ids) -> [B, F, dim] embeddings."""
+    return _core_lookup(memory, spec, table_ids[None, :], rows, dim)
+
+
+def dot_interaction_ref(feats: jnp.ndarray, self_interaction: bool = False
+                        ) -> jnp.ndarray:
+    """DLRM pairwise-dot feature interaction.
+
+    feats: [B, F, D] -> [B, F*(F-1)/2] (strictly-lower triangle of the gram
+    matrix; +F diagonal terms if self_interaction).
+    """
+    b, f, _ = feats.shape
+    gram = jnp.einsum("bfd,bgd->bfg", feats, feats)
+    rows, cols = jnp.tril_indices(f, k=0 if self_interaction else -1)
+    return gram[:, rows, cols]
+
+
+def cin_layer_ref(x0: jnp.ndarray, xk: jnp.ndarray, w: jnp.ndarray
+                  ) -> jnp.ndarray:
+    """xDeepFM Compressed Interaction Network layer.
+
+    x0: [B, F0, D] base field embeddings; xk: [B, Fk, D] previous layer;
+    w: [H, F0, Fk] compression weights -> [B, H, D].
+    z[b,i,j,d] = x0[b,i,d] * xk[b,j,d]; out[b,h,d] = Σ_ij w[h,i,j] z[b,i,j,d].
+    """
+    return jnp.einsum("bid,bjd,hij->bhd", x0, xk, w)

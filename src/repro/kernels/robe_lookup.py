@@ -1,0 +1,180 @@
+"""Pallas TPU kernel: fused ROBE hash + block-coalesced embedding lookup.
+
+This is the paper's hot path (inference is memory-bound on embedding
+fetches; §2.3 Table 1).  TPU adaptation of the paper's cache story:
+
+  * the compressed array M is small enough to be **VMEM-resident** (the
+    per-chip slice of a 100 MB array sharded 16-way is ~6 MB); VMEM plays the
+    role the LLC plays in the paper.
+  * with Z a multiple of d, one embedding row is ONE contiguous ``Z_off``-
+    shifted slice of M, so the fetch is a single aligned ``dynamic_slice``
+    (the "coalesced block read" of Table 1, row ``Z ≥ d``) instead of ``d``
+    random scalar gathers.
+  * the universal hash itself is ~a dozen uint32 VPU ops computed in-kernel
+    from the prefetched row ids — no host-side index preprocessing.
+
+Two kernels:
+  * ``robe_lookup_aligned``  — Z % d == 0 (paper's recommended regime).
+    grid over batch tiles; per (row, field) one dslice from the padded array.
+  * ``robe_lookup_general``  — any Z ≥ 1: per-element slot computation and a
+    VMEM gather.  Semantically identical to the oracle for every Z.
+
+Both validated in interpret mode against ``repro.kernels.ref.robe_lookup_ref``
+(tests/test_kernels.py sweeps B/F/d/Z/dtype).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.hashing import mul32, add64, mod_m31, split31
+from repro.core.robe import RobeSpec
+
+
+def _hash_rows(spec: RobeSpec, table_ids: jnp.ndarray, rows: jnp.ndarray,
+               dim: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Vectorized in-kernel hash for the aligned case (Z % d == 0).
+
+    rows [TB, F] int32 -> (start, None): start[TB, F] uint32 slice start into
+    the padded memory (= h(e, blk) + Z_off of the row's first element).
+    """
+    rows_u = rows.astype(jnp.uint32)
+    hi, lo = mul32(rows_u, jnp.uint32(dim))            # x*d, exact 64-bit
+    lz = spec.log2_z
+    if lz == 0:
+        b_hi, b_lo = hi, lo
+        off = jnp.zeros_like(lo)
+    else:
+        b_lo = (lo >> lz) | (hi << (32 - lz))
+        b_hi = hi >> lz
+        off = lo & jnp.uint32(spec.block_size - 1)
+    h = spec.hash_fn()
+    t = jnp.broadcast_to(table_ids.astype(jnp.uint32)[None, :], rows.shape)
+    base = h(t, b_hi, b_lo)
+    return base + off, off
+
+
+def _signs_tile(spec: RobeSpec, table_ids: jnp.ndarray, rows: jnp.ndarray,
+                dim: int) -> jnp.ndarray:
+    """±1 signs for a [TB, F] tile -> [TB, F, dim] float32."""
+    g = spec.sign_fn()
+    rows_u = rows.astype(jnp.uint32)[..., None]
+    hi, lo = mul32(rows_u, jnp.uint32(dim))
+    shape = lo.shape[:-1] + (dim,)
+    hi = jnp.broadcast_to(hi, shape)
+    lo = jnp.broadcast_to(lo, shape)
+    i = jnp.broadcast_to(jnp.arange(dim, dtype=jnp.uint32), shape)
+    hi, lo = add64(hi, lo, i)
+    t = jnp.broadcast_to(table_ids.astype(jnp.uint32)[None, :, None], shape)
+    bit = g(t, hi, lo)
+    return (1 - 2 * bit.astype(jnp.int32)).astype(jnp.float32)
+
+
+def _aligned_kernel(spec: RobeSpec, dim: int,
+                    rows_ref, tids_ref, mem_ref, out_ref):
+    tb, f = rows_ref.shape
+    rows = rows_ref[...]
+    table_ids = tids_ref[...]
+    start, _ = _hash_rows(spec, table_ids, rows, dim)      # [TB, F] uint32
+    start = start.astype(jnp.int32)
+
+    def body(r, _):
+        bi = r // f
+        fi = r % f
+        s = start[bi, fi]
+        vec = mem_ref[pl.dslice(s, dim)]
+        out_ref[pl.dslice(bi, 1), pl.dslice(fi, 1), :] = vec.reshape(1, 1, dim)
+        return 0
+
+    jax.lax.fori_loop(0, tb * f, body, 0)
+    if spec.use_sign:
+        out_ref[...] = (out_ref[...] *
+                        _signs_tile(spec, table_ids, rows, dim
+                                    ).astype(out_ref.dtype))
+
+
+def _general_kernel(spec: RobeSpec, dim: int,
+                    rows_ref, tids_ref, mem_ref, out_ref):
+    rows = rows_ref[...]
+    table_ids = tids_ref[...]
+    # per-element slots, identical math to core.robe.robe_slots
+    rows_u = rows.astype(jnp.uint32)[..., None]
+    hi, lo = mul32(rows_u, jnp.uint32(dim))
+    shape = lo.shape[:-1] + (dim,)
+    hi = jnp.broadcast_to(hi, shape)
+    lo = jnp.broadcast_to(lo, shape)
+    i = jnp.broadcast_to(jnp.arange(dim, dtype=jnp.uint32), shape)
+    hi, lo = add64(hi, lo, i)
+    lz = spec.log2_z
+    if lz == 0:
+        b_hi, b_lo = hi, lo
+        off = jnp.zeros_like(lo)
+    else:
+        b_lo = (lo >> lz) | (hi << (32 - lz))
+        b_hi = hi >> lz
+        off = lo & jnp.uint32(spec.block_size - 1)
+    h = spec.hash_fn()
+    t = jnp.broadcast_to(table_ids[None, :, None], shape)
+    slot = h(t, b_hi, b_lo) + off
+    m = jnp.uint32(spec.size)
+    slot = jnp.where(slot >= m, slot - m, slot).astype(jnp.int32)
+    mem = mem_ref[...]
+    out = jnp.take(mem, slot.reshape(-1), axis=0).reshape(shape)
+    if spec.use_sign:
+        sg = _signs_tile(spec, table_ids, rows, dim)
+        out = out * sg.astype(out.dtype)
+    out_ref[...] = out
+
+
+def _pick_batch_tile(batch: int, f: int, dim: int) -> int:
+    """Batch tile so the output tile stays ≲ 2 MB of VMEM."""
+    budget = 2 * 1024 * 1024 // 4
+    tb = max(1, budget // max(1, f * dim))
+    tb = min(tb, batch, 1024)
+    while batch % tb:
+        tb -= 1
+    return tb
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "dim", "table_ids",
+                                             "interpret"))
+def robe_lookup_pallas(memory: jnp.ndarray, rows: jnp.ndarray,
+                       table_ids: Tuple[int, ...], dim: int, spec: RobeSpec,
+                       interpret: bool = True) -> jnp.ndarray:
+    """Fused ROBE lookup: [B, F] int rows -> [B, F, dim] embeddings.
+
+    memory: [|M|] array; padded internally by one block + row so the aligned
+    kernel's dynamic slices never wrap (circular-array semantics preserved).
+    """
+    b, f = rows.shape
+    aligned = (spec.block_size % dim == 0)
+    tb = _pick_batch_tile(b, f, dim)
+    grid = (b // tb,)
+
+    if aligned:
+        pad = spec.block_size + dim
+        mem_in = jnp.concatenate([memory, memory[:pad]])
+        body = functools.partial(_aligned_kernel, spec, dim)
+    else:
+        mem_in = memory
+        body = functools.partial(_general_kernel, spec, dim)
+
+    tids = jnp.asarray(table_ids, dtype=jnp.uint32)
+    out = pl.pallas_call(
+        body,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tb, f), lambda i: (i, 0)),            # row ids
+            pl.BlockSpec((f,), lambda i: (0,)),                 # table ids
+            pl.BlockSpec((mem_in.shape[0],), lambda i: (0,)),   # M in VMEM
+        ],
+        out_specs=pl.BlockSpec((tb, f, dim), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, f, dim), memory.dtype),
+        interpret=interpret,
+    )(rows, tids, mem_in)
+    return out

@@ -1,0 +1,22 @@
+"""Production mesh (assignment spec): 16×16 single pod, 2×16×16 multi-pod.
+
+A FUNCTION, not a module-level constant — importing this module never
+touches jax device state.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_context(*, multi_pod: bool = False):
+    from repro.dist.api import DistContext, default_rules
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    return DistContext(mesh=mesh, rules=default_rules(multi_pod),
+                       multi_pod=multi_pod)

@@ -1,0 +1,192 @@
+"""GatedGCN (Bresson & Laurent; benchmarking-gnns arXiv:2003.00982).
+
+Message passing is built from ``jax.ops.segment_sum`` over an explicit
+edge-index list (JAX has no sparse SpMM beyond BCOO — the segment-scatter
+formulation IS the system, per the assignment):
+
+    ê_ij = C e_ij + D h_i + E h_j                     (edge gate logits)
+    η_ij = σ(ê_ij) / (Σ_{j'→i} σ(ê_ij') + ε)          (segment-normalized)
+    h_i' = h_i + ReLU(BN(A h_i + Σ_{j→i} η_ij ⊙ B h_j))
+    e_ij' = e_ij + ReLU(BN(ê_ij))
+
+Batch layout (works for all four shape cells):
+    nodes  [B, N, d_feat]   (B=1 for full-graph cells)
+    edges  [B, E, 2] int32  (src, dst), −1-padded
+    mask   derived from edge −1 padding; node validity via n_nodes.
+
+ROBE applicability: none for the float-feature cells (see DESIGN.md §5);
+``molecule`` cells use an atom-type embedding table (optionally ROBE).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import api as dist
+from repro.nn.core import batch_norm_apply, batch_norm_init, dense_apply, \
+    dense_init, mlp_apply, mlp_init
+
+
+@dataclasses.dataclass(frozen=True)
+class GatedGCNConfig:
+    name: str
+    n_layers: int
+    d_hidden: int
+    d_feat: int
+    n_classes: int
+    task: str = "node_class"          # "node_class" | "graph_class"
+    atom_vocab: int = 0               # molecule cells: categorical features
+    compute_dtype: object = jnp.float32
+
+
+def init_params(key, cfg: GatedGCNConfig) -> dict:
+    ks = jax.random.split(key, cfg.n_layers + 3)
+    h = cfg.d_hidden
+    if cfg.atom_vocab:
+        embed = {"table": jax.random.normal(ks[0], (cfg.atom_vocab, h),
+                                            jnp.float32) * 0.1}
+    else:
+        embed = dense_init(ks[0], cfg.d_feat, h)
+    layers = []
+    for i in range(cfg.n_layers):
+        kk = jax.random.split(ks[i + 1], 5)
+        layers.append({
+            "A": dense_init(kk[0], h, h), "B": dense_init(kk[1], h, h),
+            "C": dense_init(kk[2], h, h), "D": dense_init(kk[3], h, h),
+            "E": dense_init(kk[4], h, h),
+            "bn_h": batch_norm_init(h), "bn_e": batch_norm_init(h)})
+    return {"embed": embed,
+            "edge_embed": dense_init(ks[-2], 1, h),
+            "layers": layers,
+            "readout": mlp_init(ks[-1], (h, h // 2, cfg.n_classes))}
+
+
+def _layer(p, h: jnp.ndarray, e: jnp.ndarray, src: jnp.ndarray,
+           dst: jnp.ndarray, emask: jnp.ndarray, n_nodes: int,
+           psum_axes=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One GatedGCN layer on a single graph.
+
+    h [N, H], e [E, H], src/dst [E] int32 (clipped-safe), emask [E] {0,1}.
+    ``psum_axes``: when run inside shard_map with edges sharded, node-side
+    segment sums are per-shard partials reduced with psum (edge-parallel
+    message passing; node state replicated).
+    """
+    hi = jnp.take(h, src, axis=0)             # source node states  [E,H]
+    hj = jnp.take(h, dst, axis=0)             # destination states  [E,H]
+    e_hat = (dense_apply(p["C"], e) + dense_apply(p["D"], hj)
+             + dense_apply(p["E"], hi))
+    sig = jax.nn.sigmoid(e_hat) * emask[:, None]
+    # segment-normalized gates over incoming edges of each dst node
+    denom = jax.ops.segment_sum(sig, dst, num_segments=n_nodes)
+    if psum_axes:
+        denom = jax.lax.psum(denom, psum_axes)
+    eta = sig / (jnp.take(denom, dst, axis=0) + 1e-6)
+    msg = eta * dense_apply(p["B"], hi) * emask[:, None]
+    agg = jax.ops.segment_sum(msg, dst, num_segments=n_nodes)
+    if psum_axes:
+        agg = jax.lax.psum(agg, psum_axes)
+    h_new = h + jax.nn.relu(
+        batch_norm_apply(p["bn_h"], dense_apply(p["A"], h) + agg))
+    e_new = e + jax.nn.relu(_bn_edges(p["bn_e"], e_hat, emask, psum_axes))
+    return h_new, e_new
+
+
+def _bn_edges(p, e_hat, emask, psum_axes, eps=1e-5):
+    """BatchNorm over (sharded, padded) edges: masked global batch stats."""
+    w = emask[:, None].astype(jnp.float32)
+    x = e_hat.astype(jnp.float32) * w
+    cnt = w.sum()
+    s1 = x.sum(0)
+    s2 = (x * x).sum(0)
+    if psum_axes:
+        cnt = jax.lax.psum(cnt, psum_axes)
+        s1 = jax.lax.psum(s1, psum_axes)
+        s2 = jax.lax.psum(s2, psum_axes)
+    mu = s1 / jnp.maximum(cnt, 1.0)
+    var = s2 / jnp.maximum(cnt, 1.0) - mu * mu
+    y = (e_hat.astype(jnp.float32) - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["g"] + p["b"]).astype(e_hat.dtype)
+
+
+def forward(params, cfg: GatedGCNConfig, batch: dict) -> jnp.ndarray:
+    """-> logits: [B, N, n_classes] (node task) or [B, n_classes] (graph)."""
+    nodes = batch["nodes"]
+    edges = batch["edges"]                    # [B, E, 2], -1 padded
+    bsz, n, _ = nodes.shape
+
+    if cfg.atom_vocab:
+        h0 = jnp.take(params["embed"]["table"],
+                      batch["atom_types"], axis=0)      # [B,N,H]
+    else:
+        h0 = dense_apply(params["embed"],
+                         nodes.astype(cfg.compute_dtype))
+    emask = (edges[..., 0] >= 0)
+    src = jnp.where(emask, edges[..., 0], 0)
+    dst = jnp.where(emask, edges[..., 1], 0)
+    e0 = jnp.broadcast_to(
+        dense_apply(params["edge_embed"],
+                    jnp.ones((1, 1), cfg.compute_dtype)),
+        (bsz, edges.shape[1], cfg.d_hidden))
+
+    ctx = dist.current()
+    if ctx is not None and bsz == 1 and edges.shape[1] >= 4096:
+        # edge-parallel message passing: edges sharded over the whole mesh,
+        # node state replicated, per-layer psum of the segment reductions
+        from jax.sharding import PartitionSpec as P
+        axes = tuple(ctx.mesh.axis_names)
+
+        def body(pp, hh, ee, ss, dd, mm):
+            h1, e1 = hh[0], ee[0]
+            for p in pp["layers"]:
+                h1, e1 = _layer(p, h1, e1, ss[0], dd[0],
+                                mm[0].astype(h1.dtype), n, psum_axes=axes)
+            return h1[None]
+
+        h = jax.shard_map(
+            body, mesh=ctx.mesh,
+            in_specs=(jax.tree.map(lambda _: P(), params),
+                      P(None, None, None), P(None, axes, None),
+                      P(None, axes), P(None, axes), P(None, axes)),
+            out_specs=P(None, None, None),
+            check_vma=False)(params, h0, e0, src, dst, emask)
+    else:
+        def per_graph(h, e, s, d, m):
+            for p in params["layers"]:
+                h, e = _layer(p, h, e, s, d, m.astype(h.dtype), n)
+            return h
+
+        h = jax.vmap(per_graph)(h0, e0, src, dst, emask)
+    if cfg.task == "graph_class":
+        nmask = batch.get("node_mask")
+        if nmask is None:
+            g = h.mean(axis=1)
+        else:
+            w = nmask.astype(h.dtype)[..., None]
+            g = (h * w).sum(1) / jnp.maximum(w.sum(1), 1.0)
+        return mlp_apply(params["readout"], g)
+    return mlp_apply(params["readout"], h)
+
+
+def loss_fn(params, cfg: GatedGCNConfig, batch: dict
+            ) -> Tuple[jnp.ndarray, dict]:
+    logits = forward(params, cfg, batch)
+    labels = batch["labels"]
+    if cfg.task == "graph_class":
+        lse = jax.nn.logsumexp(logits, -1)
+        gold = jnp.take_along_axis(logits, labels[..., None], -1)[..., 0]
+        loss = (lse - gold).mean()
+    else:
+        mask = batch.get("label_mask")
+        lse = jax.nn.logsumexp(logits, -1)
+        gold = jnp.take_along_axis(logits, labels[..., None], -1)[..., 0]
+        per = lse - gold
+        if mask is not None:
+            w = mask.astype(per.dtype)
+            loss = (per * w).sum() / jnp.maximum(w.sum(), 1.0)
+        else:
+            loss = per.mean()
+    return loss, {"loss": loss}

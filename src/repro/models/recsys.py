@@ -1,0 +1,296 @@
+"""RecSys family: DLRM, AutoInt, xDeepFM, DeepFM, DCN, FiBiNET, Two-Tower.
+
+All share the embedding front-end (``EmbeddingSpec``: full-table baseline or
+ROBE array — the paper's comparison axis) and differ in the interaction op.
+Batch layout: dense features [B, n_dense] float, sparse ids [B, F] int32.
+
+Outputs are logits [B] (CTR models) or (user_vec, item_vec) (two-tower).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.robe import RobeSpec
+from repro.dist import api as dist
+from repro.nn.core import dense_apply, dense_init, mlp_apply, mlp_init
+from repro.nn.embeddings import EmbeddingSpec, embedding_init, \
+    embedding_lookup
+from repro.nn.interactions import (autoint_layer_apply, autoint_layer_init,
+                                   bilinear_apply, bilinear_init, cin_apply,
+                                   cin_init, cross_net_apply, cross_net_init,
+                                   dot_interaction_op, fm_interaction,
+                                   senet_apply, senet_init)
+
+
+@dataclasses.dataclass(frozen=True)
+class RecsysConfig:
+    name: str
+    arch: str                        # dlrm|autoint|xdeepfm|deepfm|dcn|fibinet|two_tower
+    vocab_sizes: Tuple[int, ...]
+    embed_dim: int
+    n_dense: int = 0
+    bot_mlp: Tuple[int, ...] = ()
+    top_mlp: Tuple[int, ...] = ()
+    dnn: Tuple[int, ...] = ()        # deep branch (deepfm/xdeepfm/dcn/…)
+    cin_layers: Tuple[int, ...] = ()
+    cross_layers: int = 0
+    attn_layers: int = 0
+    attn_dim: int = 0
+    attn_heads: int = 0
+    tower_mlp: Tuple[int, ...] = ()  # two-tower
+    n_user_fields: int = 0           # two-tower: first k fields are user side
+    # embedding substrate
+    embedding: str = "robe"          # "robe" | "full"
+    robe_size: int = 0
+    robe_block: int = 32
+    use_kernel: bool = False
+    full_table_shard: str = "model"  # "model" | "2d" (rows over ALL devices;
+    # kills the data-axis dense table-grad all-reduce — §Perf iteration)
+    compute_dtype: object = jnp.float32
+
+    def embedding_spec(self) -> EmbeddingSpec:
+        robe = None
+        if self.embedding == "robe":
+            robe = RobeSpec(size=self.robe_size, block_size=self.robe_block,
+                            seed=11)
+        return EmbeddingSpec(vocab_sizes=self.vocab_sizes,
+                             dim=self.embed_dim, kind=self.embedding,
+                             robe=robe, use_kernel=self.use_kernel)
+
+    @property
+    def n_fields(self) -> int:
+        return len(self.vocab_sizes)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_params(key, cfg: RecsysConfig) -> dict:
+    ks = jax.random.split(key, 10)
+    spec = cfg.embedding_spec()
+    # pad the concatenated table so it row-shards evenly on any mesh ≤ 512
+    p: dict = {"embedding": embedding_init(ks[0], spec, pad_rows_to=512)}
+    f, d = cfg.n_fields, cfg.embed_dim
+    a = cfg.arch
+    if a == "dlrm":
+        p["bot"] = mlp_init(ks[1], (cfg.n_dense,) + cfg.bot_mlp)
+        n_pairs = (f + 1) * f // 2          # F embeddings + bottom output
+        p["top"] = mlp_init(ks[2], (cfg.bot_mlp[-1] + n_pairs,) + cfg.top_mlp)
+    elif a == "autoint":
+        p["attn"] = [autoint_layer_init(
+            jax.random.fold_in(ks[1], i),
+            d if i == 0 else cfg.attn_dim * cfg.attn_heads,
+            cfg.attn_dim, cfg.attn_heads) for i in range(cfg.attn_layers)]
+        p["out"] = dense_init(ks[2], f * cfg.attn_dim * cfg.attn_heads, 1)
+    elif a == "xdeepfm":
+        p["cin"] = cin_init(ks[1], f, cfg.cin_layers)
+        p["dnn"] = mlp_init(ks[2], (f * d,) + cfg.dnn + (1,))
+        p["cin_out"] = dense_init(ks[3], sum(cfg.cin_layers), 1)
+        p["linear"] = dense_init(ks[4], f * d, 1)
+    elif a == "deepfm":
+        p["dnn"] = mlp_init(ks[1], (f * d,) + cfg.dnn + (1,))
+        p["linear"] = dense_init(ks[2], f * d, 1)
+    elif a == "dcn":
+        p["cross"] = cross_net_init(ks[1], f * d, cfg.cross_layers)
+        p["dnn"] = mlp_init(ks[2], (f * d,) + cfg.dnn)
+        p["out"] = dense_init(ks[3], f * d + cfg.dnn[-1], 1)
+    elif a == "fibinet":
+        p["senet"] = senet_init(ks[1], f)
+        p["bilinear"] = bilinear_init(ks[2], f, d)
+        p["bilinear2"] = bilinear_init(ks[3], f, d)
+        n_bi = f * (f - 1) // 2 * d
+        p["dnn"] = mlp_init(ks[4], (2 * n_bi,) + cfg.dnn + (1,))
+    elif a == "two_tower":
+        in_u = cfg.n_user_fields * d
+        in_i = (f - cfg.n_user_fields) * d
+        p["user"] = mlp_init(ks[1], (in_u,) + cfg.tower_mlp)
+        p["item"] = mlp_init(ks[2], (in_i,) + cfg.tower_mlp)
+    else:
+        raise ValueError(f"unknown recsys arch {a}")
+    return p
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _embed(params, cfg: RecsysConfig, sparse_ids: jnp.ndarray) -> jnp.ndarray:
+    spec = cfg.embedding_spec()
+    ctx = dist.current()
+    batch = sparse_ids.shape[0]
+    n_data = 1
+    n_model = ctx.mesh.shape["model"] if ctx is not None else 1
+    if ctx is not None:
+        for a in ctx.dp_axes:
+            n_data *= ctx.mesh.shape[a]
+    if ctx is not None and spec.kind == "full" and batch % n_data == 0 \
+            and cfg.full_table_shard == "2d" \
+            and batch % (n_data * n_model) == 0:
+        # §Perf (dlrm-rm2 hillclimb): rows sharded over the WHOLE mesh.
+        # Each device all-gathers the (tiny) global index set, computes
+        # masked partials against its unique row slice, and one
+        # reduce-scatter over all axes delivers each device its batch
+        # slice.  Table gradients stay local to their owning shard — the
+        # 2×(table bytes / n_model) data-axis all-reduce of the "model"
+        # layout disappears.
+        from jax.sharding import PartitionSpec as P
+        table = params["embedding"]["table"]
+        dp = ctx.rules.get("batch")
+        dp_t = (dp,) if isinstance(dp, str) else tuple(dp)
+        all_axes = dp_t + ("model",)
+        n_all = n_data * n_model
+        shard_rows = table.shape[0] // n_all
+
+        def body2d(tb, ix):
+            # indices are model-replicated; gather the other data shards'
+            # rows so this device can serve the whole global batch
+            ix_all = jax.lax.all_gather(ix, dp_t, axis=0, tiled=True)
+            g = jnp.asarray(spec.offsets, jnp.int32)[None, :] + ix_all
+            lin = jax.lax.axis_index(all_axes)
+            local = g - lin * shard_rows
+            hit = (local >= 0) & (local < shard_rows)
+            part = jnp.take(tb.astype(cfg.compute_dtype),
+                            jnp.clip(local, 0, shard_rows - 1), axis=0)
+            part = jnp.where(hit[..., None], part, 0)
+            return jax.lax.psum_scatter(part, all_axes,
+                                        scatter_dimension=0, tiled=True)
+
+        emb = jax.shard_map(
+            body2d, mesh=ctx.mesh,
+            in_specs=(P(all_axes, None), P(dp, None)),
+            out_specs=P(all_axes, None, None))(table, sparse_ids)
+        return emb.astype(cfg.compute_dtype)
+    if ctx is not None and spec.kind == "full" and batch % n_data == 0:
+        # the paper's baseline: tables row-sharded over `model`; the lookup
+        # is a masked local gather + batch reduce-scatter (≡ the production
+        # all_to_all embedding exchange). See nn/embeddings.py.  When the
+        # per-data-shard batch doesn't divide by `model`, fall back to a
+        # psum (same semantics, all-reduce volume instead of RS).
+        from jax.sharding import PartitionSpec as P
+        from repro.nn.embeddings import full_lookup_sharded_body
+        table = params["embedding"]["table"]
+        shard_rows = table.shape[0] // n_model
+        dp = ctx.rules.get("batch")
+        dp_t = (dp,) if isinstance(dp, str) else tuple(dp)
+        scatter_ok = (batch // n_data) % n_model == 0
+
+        def body(tb, ix):
+            if scatter_ok:
+                return full_lookup_sharded_body(tb, ix, spec.offsets,
+                                                "model", shard_rows)
+            g = jnp.asarray(spec.offsets, jnp.int32)[None, :] + ix
+            m_idx = jax.lax.axis_index("model")
+            local = g - m_idx * shard_rows
+            hit = (local >= 0) & (local < shard_rows)
+            part = jnp.take(tb, jnp.clip(local, 0, shard_rows - 1), axis=0)
+            part = jnp.where(hit[..., None], part, 0.0)
+            return jax.lax.psum(part, "model")
+
+        out_spec = P(dp_t + ("model",), None, None) if scatter_ok \
+            else P(dp, None, None)
+        emb = jax.shard_map(
+            body, mesh=ctx.mesh,
+            in_specs=(P("model", None), P(dp, None)),
+            out_specs=out_spec)(table, sparse_ids)
+    else:
+        emb = embedding_lookup(params["embedding"], spec, sparse_ids)
+        if ctx is not None and batch % (n_data * n_model) == 0:
+            emb = dist.shard(emb, "flat_batch", None, None)
+    return emb.astype(cfg.compute_dtype)
+
+
+def forward(params, cfg: RecsysConfig, batch: dict) -> jnp.ndarray:
+    """batch: {"dense": [B,n_dense], "sparse": [B,F]} -> logits [B]."""
+    a = cfg.arch
+    emb = _embed(params, cfg, batch["sparse"])       # [B,F,D]
+    b, f, d = emb.shape
+    flat = emb.reshape(b, f * d)
+    if a == "dlrm":
+        dense = batch["dense"].astype(cfg.compute_dtype)
+        bot = mlp_apply(params["bot"], dense, final_act=jax.nn.relu)
+        feats = jnp.concatenate([bot[:, None, :], emb], axis=1)
+        inter = dot_interaction_op(feats, use_kernel=cfg.use_kernel)
+        top_in = jnp.concatenate([bot, inter], axis=-1)
+        return mlp_apply(params["top"], top_in)[:, 0]
+    if a == "autoint":
+        x = emb
+        for layer in params["attn"]:
+            x = autoint_layer_apply(layer, x, cfg.attn_heads)
+        return dense_apply(params["out"], x.reshape(b, -1))[:, 0]
+    if a == "xdeepfm":
+        cin = cin_apply(params["cin"], emb)
+        return (dense_apply(params["cin_out"], cin)[:, 0]
+                + mlp_apply(params["dnn"], flat)[:, 0]
+                + dense_apply(params["linear"], flat)[:, 0])
+    if a == "deepfm":
+        return (fm_interaction(emb)[:, 0]
+                + mlp_apply(params["dnn"], flat)[:, 0]
+                + dense_apply(params["linear"], flat)[:, 0])
+    if a == "dcn":
+        cross = cross_net_apply(params["cross"], flat)
+        deep = mlp_apply(params["dnn"], flat, final_act=jax.nn.relu)
+        return dense_apply(params["out"],
+                           jnp.concatenate([cross, deep], -1))[:, 0]
+    if a == "fibinet":
+        se = senet_apply(params["senet"], emb)
+        bi1 = bilinear_apply(params["bilinear"], emb)
+        bi2 = bilinear_apply(params["bilinear2"], se)
+        x = jnp.concatenate([bi1, bi2], axis=-1)
+        return mlp_apply(params["dnn"], x)[:, 0]
+    raise ValueError(f"forward undefined for {a}")
+
+
+def tower_vectors(params, cfg: RecsysConfig, batch: dict
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """two-tower: -> (user [B,D], item [B,D]), L2-normalized."""
+    emb = _embed(params, cfg, batch["sparse"])
+    b = emb.shape[0]
+    ku = cfg.n_user_fields
+    u = mlp_apply(params["user"], emb[:, :ku].reshape(b, -1))
+    v = mlp_apply(params["item"], emb[:, ku:].reshape(b, -1))
+    u = u / jnp.linalg.norm(u, axis=-1, keepdims=True).clip(1e-6)
+    v = v / jnp.linalg.norm(v, axis=-1, keepdims=True).clip(1e-6)
+    return u, v
+
+
+def loss_fn(params, cfg: RecsysConfig, batch: dict) -> Tuple[jnp.ndarray,
+                                                             dict]:
+    if cfg.arch == "two_tower":
+        u, v = tower_vectors(params, cfg, batch)
+        logits = (u @ v.T) * 20.0               # in-batch sampled softmax
+        labels = jnp.arange(u.shape[0])
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.diag(logits)
+        loss = (lse - gold).mean()
+        return loss, {"loss": loss}
+    logits = forward(params, cfg, batch)
+    y = batch["label"].astype(jnp.float32)
+    ce = jnp.mean(jnp.maximum(logits, 0) - logits * y
+                  + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+    return ce, {"logloss": ce}
+
+
+def serve_scores(params, cfg: RecsysConfig, batch: dict) -> jnp.ndarray:
+    """Online/bulk inference: logits (CTR) or retrieval scores."""
+    if cfg.arch == "two_tower":
+        # retrieval: one (or few) queries against a candidate id set
+        emb_spec = cfg.embedding_spec()
+        u, _ = tower_vectors(params, cfg, batch)
+        item_fields = tuple(range(cfg.n_user_fields, cfg.n_fields))
+        cand = embedding_lookup(
+            params["embedding"], emb_spec,
+            batch["cand_sparse"].reshape(-1, len(item_fields)),
+            fields=item_fields)
+        n = cand.shape[0]
+        cand = dist.shard(cand, "candidates", None, None)
+        vi = mlp_apply(params["item"],
+                       cand.astype(cfg.compute_dtype).reshape(n, -1))
+        vi = vi / jnp.linalg.norm(vi, axis=-1, keepdims=True).clip(1e-6)
+        return (u @ vi.T)                        # [B, n_candidates]
+    return forward(params, cfg, batch)

@@ -1,0 +1,336 @@
+"""Attention for the LM family: GQA (w/ qk-norm, bias options) and MLA.
+
+Memory-wise the key design is *chunked* causal attention: queries processed
+in ``q_chunk`` blocks via ``lax.scan`` so the [T, T] score matrix never
+materializes (needed for the 32k prefill cells).  Decode uses a KV cache and
+one-token queries; MLA decode runs in the **absorbed** latent form (scores
+and context computed against the compressed c_kv cache — the only sane way
+at 32k × batch 128).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.api import shard
+from repro.nn.core import dense_apply, dense_init, rms_norm_apply, \
+    rms_norm_init
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    kind: str = "gqa"            # "gqa" | "mla"
+    qk_norm: bool = False        # qwen3
+    qkv_bias: bool = False       # qwen1.5
+    rope_theta: float = 1e4
+    q_chunk: int = 512           # 0 = unchunked
+    # MLA dims (minicpm3 / deepseek-style)
+    q_lora_rank: int = 768
+    kv_lora_rank: int = 256
+    qk_nope_dim: int = 64
+    qk_rope_dim: int = 32
+    v_head_dim: int = 64
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_cos_sin(positions: jnp.ndarray, dim: int, theta: float
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """positions [...,T] -> cos/sin [...,T, dim/2] (fp32)."""
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray
+               ) -> jnp.ndarray:
+    """x [..., T, H, D]; cos/sin [..., T, D/2] broadcast over heads."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1
+                           ).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# core chunked-causal GQA math (shared by gqa and mla-expanded paths)
+# ---------------------------------------------------------------------------
+
+def _attend(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+            causal: bool, q_offset, kv_len: Optional[jnp.ndarray],
+            scale: float) -> jnp.ndarray:
+    """q [B,Tq,Kv,G,D] k [B,S,Kv,D] v [B,S,Kv,Dv] -> [B,Tq,Kv,G,Dv]."""
+    s = jnp.einsum("btkgd,bskd->bkgts", q, k).astype(jnp.float32) * scale
+    tq, sk = q.shape[1], k.shape[1]
+    if causal:
+        qpos = q_offset + jnp.arange(tq)
+        mask = qpos[:, None] >= jnp.arange(sk)[None, :]
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+    if kv_len is not None:                      # decode: only filled slots
+        valid = jnp.arange(sk)[None, :] < kv_len[:, None]
+        s = jnp.where(valid[:, None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    return jnp.einsum("bkgts,bskd->btkgd", p, v)
+
+
+def chunked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                      n_kv: int, q_chunk: int, causal: bool = True,
+                      q_offset=0, kv_len: Optional[jnp.ndarray] = None,
+                      scale: Optional[float] = None) -> jnp.ndarray:
+    """q [B,T,H,D] k/v [B,S,Kv,D*] -> [B,T,H,Dv]; scores never [T,S] resident.
+
+    Chunking over queries (scan) bounds live memory to [B, qc, .., S].
+    """
+    b, t, h, d = q.shape
+    g = h // n_kv
+    scale = scale if scale is not None else d ** -0.5
+    qg = q.reshape(b, t, n_kv, g, d)
+    if q_chunk and t > q_chunk and t % q_chunk == 0:
+        nc = t // q_chunk
+        qs = qg.reshape(b, nc, q_chunk, n_kv, g, d).transpose(1, 0, 2, 3, 4, 5)
+
+        def step(_, args):
+            qc, off = args
+            o = _attend(qc, k, v, causal, off, kv_len, scale)
+            return None, o
+
+        offs = q_offset + jnp.arange(nc) * q_chunk
+        _, outs = jax.lax.scan(step, None, (qs, offs))
+        out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, t, n_kv, g, -1)
+    else:
+        out = _attend(qg, k, v, causal, q_offset, kv_len, scale)
+        out = out.reshape(b, t, n_kv, g, -1)
+    return out.reshape(b, t, h, -1)
+
+
+# ---------------------------------------------------------------------------
+# GQA block
+# ---------------------------------------------------------------------------
+
+def gqa_init(key, cfg: AttnConfig) -> dict:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    hd, nh, nkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    p = {"wq": dense_init(kq, cfg.d_model, nh * hd, bias=cfg.qkv_bias,
+                          scale=0.02),
+         "wk": dense_init(kk, cfg.d_model, nkv * hd, bias=cfg.qkv_bias,
+                          scale=0.02),
+         "wv": dense_init(kv, cfg.d_model, nkv * hd, bias=cfg.qkv_bias,
+                          scale=0.02),
+         "wo": dense_init(ko, nh * hd, cfg.d_model, bias=False, scale=0.02)}
+    if cfg.qk_norm:
+        p["q_norm"] = rms_norm_init(hd)
+        p["k_norm"] = rms_norm_init(hd)
+    return p
+
+
+def gqa_apply(p: dict, cfg: AttnConfig, x: jnp.ndarray,
+              positions: jnp.ndarray,
+              cache: Optional[dict] = None,
+              kv_len: Optional[jnp.ndarray] = None,
+              return_kv: bool = False
+              ) -> Tuple[jnp.ndarray, Optional[dict]]:
+    """x [B,T,D]. cache = {"k","v"} [B,S,Kv,hd] rolling buffers (decode) —
+    new tokens written at ``positions``; returns (out, updated cache).
+    return_kv (prefill): also return the computed full-seq {"k","v"}."""
+    b, t, _ = x.shape
+    hd, nh, nkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    q = dense_apply(p["wq"], x).reshape(b, t, nh, hd)
+    k = dense_apply(p["wk"], x).reshape(b, t, nkv, hd)
+    v = dense_apply(p["wv"], x).reshape(b, t, nkv, hd)
+    if cfg.qk_norm:
+        q = rms_norm_apply(p["q_norm"], q)
+        k = rms_norm_apply(p["k_norm"], k)
+    cos, sin = rope_cos_sin(positions, hd, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    from repro.dist.api import shard_if_divisible
+    q = shard_if_divisible(q, ("batch", None, "heads", None))
+    k = shard_if_divisible(k, ("batch", None, "kv_heads", None))
+    v = shard_if_divisible(v, ("batch", None, "kv_heads", None))
+
+    if cache is not None:
+        # decode (t small): write new k/v at current positions
+        pos0 = positions[0] if positions.ndim else positions
+        if "k_scale" in cache:
+            # int8 quantized cache: symmetric per-(position, kv-head) scale
+            # — 4× less HBM sweep per decode step than bf16 (the
+            # qwen1.5-32b decode_32k lever, EXPERIMENTS.md §Dry-run)
+            def q8(val):
+                s = jnp.max(jnp.abs(val), axis=-1) / 127.0 + 1e-12
+                qv = jnp.clip(jnp.round(val / s[..., None]),
+                              -127, 127).astype(jnp.int8)
+                return qv, s.astype(jnp.float32)
+            qk, sk = q8(k.astype(jnp.float32))
+            qv_, sv = q8(v.astype(jnp.float32))
+            cache = {
+                "k": jax.lax.dynamic_update_slice(cache["k"], qk,
+                                                  (0, pos0, 0, 0)),
+                "v": jax.lax.dynamic_update_slice(cache["v"], qv_,
+                                                  (0, pos0, 0, 0)),
+                "k_scale": jax.lax.dynamic_update_slice(
+                    cache["k_scale"], sk, (0, pos0, 0)),
+                "v_scale": jax.lax.dynamic_update_slice(
+                    cache["v_scale"], sv, (0, pos0, 0)),
+            }
+            kf = (cache["k"].astype(x.dtype)
+                  * cache["k_scale"][..., None].astype(x.dtype))
+            vf = (cache["v"].astype(x.dtype)
+                  * cache["v_scale"][..., None].astype(x.dtype))
+        else:
+            ck = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, pos0, 0, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, pos0, 0, 0))
+            cache = {"k": ck, "v": cv}
+            kf = ck.astype(x.dtype)
+            vf = cv.astype(x.dtype)
+        out = chunked_attention(q, kf, vf, nkv, 0, causal=False,
+                                kv_len=kv_len)
+    else:
+        out = chunked_attention(q, k, v, nkv, cfg.q_chunk, causal=True)
+        if return_kv:
+            cache = {"k": k, "v": v}
+    out = out.reshape(b, t, nh * hd)
+    return dense_apply(p["wo"], out), cache
+
+
+# ---------------------------------------------------------------------------
+# MLA block (latent-compressed KV; minicpm3 / deepseek family)
+# ---------------------------------------------------------------------------
+
+def mla_init(key, cfg: AttnConfig) -> dict:
+    ks = jax.random.split(key, 8)
+    nh = cfg.n_heads
+    qd = cfg.qk_nope_dim + cfg.qk_rope_dim
+    return {
+        "w_dq": dense_init(ks[0], cfg.d_model, cfg.q_lora_rank, bias=False,
+                           scale=0.02),
+        "q_norm": rms_norm_init(cfg.q_lora_rank),
+        "w_uq": dense_init(ks[1], cfg.q_lora_rank, nh * qd, bias=False,
+                           scale=0.02),
+        "w_dkv": dense_init(ks[2], cfg.d_model,
+                            cfg.kv_lora_rank + cfg.qk_rope_dim, bias=False,
+                            scale=0.02),
+        "kv_norm": rms_norm_init(cfg.kv_lora_rank),
+        "w_uk": dense_init(ks[3], cfg.kv_lora_rank, nh * cfg.qk_nope_dim,
+                           bias=False, scale=0.02),
+        "w_uv": dense_init(ks[4], cfg.kv_lora_rank, nh * cfg.v_head_dim,
+                           bias=False, scale=0.02),
+        "wo": dense_init(ks[5], nh * cfg.v_head_dim, cfg.d_model, bias=False,
+                         scale=0.02),
+    }
+
+
+def _mla_qkr(p, cfg, x, positions):
+    """Shared q / compressed-kv computation. Returns q_nope, q_rope, c_kv,
+    k_rope (rope applied)."""
+    b, t, _ = x.shape
+    nh = cfg.n_heads
+    ql = rms_norm_apply(p["q_norm"], dense_apply(p["w_dq"], x))
+    q = dense_apply(p["w_uq"], ql).reshape(
+        b, t, nh, cfg.qk_nope_dim + cfg.qk_rope_dim)
+    q_nope = q[..., :cfg.qk_nope_dim]
+    q_rope = q[..., cfg.qk_nope_dim:]
+    dkv = dense_apply(p["w_dkv"], x)
+    c_kv = rms_norm_apply(p["kv_norm"], dkv[..., :cfg.kv_lora_rank])
+    k_rope = dkv[..., cfg.kv_lora_rank:][:, :, None, :]   # single shared head
+    cos, sin = rope_cos_sin(positions, cfg.qk_rope_dim, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+    k_rope = apply_rope(k_rope, cos, sin)[:, :, 0, :]
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_apply(p: dict, cfg: AttnConfig, x: jnp.ndarray,
+              positions: jnp.ndarray,
+              cache: Optional[dict] = None,
+              kv_len: Optional[jnp.ndarray] = None,
+              return_kv: bool = False
+              ) -> Tuple[jnp.ndarray, Optional[dict]]:
+    b, t, _ = x.shape
+    nh = cfg.n_heads
+    scale = (cfg.qk_nope_dim + cfg.qk_rope_dim) ** -0.5
+    q_nope, q_rope, c_kv, k_rope = _mla_qkr(p, cfg, x, positions)
+
+    if cache is None:
+        # train / prefill: expanded form, chunked over queries
+        k_nope = dense_apply(p["w_uk"], c_kv).reshape(b, t, nh,
+                                                      cfg.qk_nope_dim)
+        v = dense_apply(p["w_uv"], c_kv).reshape(b, t, nh, cfg.v_head_dim)
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                      (b, t, nh, cfg.qk_rope_dim))], axis=-1)
+        from repro.dist.api import shard_if_divisible
+        q = shard_if_divisible(q, ("batch", None, "heads", None))
+        k = shard_if_divisible(k, ("batch", None, "heads", None))
+        v = shard_if_divisible(v, ("batch", None, "heads", None))
+        out = chunked_attention(q, k, v, nh, cfg.q_chunk, causal=True,
+                                scale=scale)
+        out = out.reshape(b, t, nh * cfg.v_head_dim)
+        kv = {"c_kv": c_kv, "k_rope": k_rope} if return_kv else None
+        return dense_apply(p["wo"], out), kv
+
+    # decode: absorbed latent attention against the compressed cache
+    pos0 = positions[0] if positions.ndim else positions
+    cc = jax.lax.dynamic_update_slice(
+        cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), (0, pos0, 0))
+    cr = jax.lax.dynamic_update_slice(
+        cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), (0, pos0, 0))
+    cache = {"c_kv": cc, "k_rope": cr}
+    ckv = cc.astype(x.dtype)                    # [B,S,R]
+    krp = cr.astype(x.dtype)                    # [B,S,rope]
+    w_uk = p["w_uk"]["w"].reshape(cfg.kv_lora_rank, nh, cfg.qk_nope_dim)
+    # absorb: q' = q_nope @ W_uk^T  -> latent-space queries
+    q_lat = jnp.einsum("bthd,rhd->bthr", q_nope,
+                       w_uk.astype(x.dtype))    # [B,T,H,R]
+    s = (jnp.einsum("bthr,bsr->bhts", q_lat, ckv) +
+         jnp.einsum("bthd,bsd->bhts", q_rope, krp)).astype(jnp.float32)
+    s = s * scale
+    sk = ckv.shape[1]
+    if kv_len is not None:
+        valid = jnp.arange(sk)[None, :] < kv_len[:, None]
+        s = jnp.where(valid[:, None, None], s, NEG_INF)
+    att = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+    ctx = jnp.einsum("bhts,bsr->bthr", att, ckv)          # latent context
+    w_uv = p["w_uv"]["w"].reshape(cfg.kv_lora_rank, nh, cfg.v_head_dim)
+    out = jnp.einsum("bthr,rhd->bthd", ctx, w_uv.astype(x.dtype))
+    out = out.reshape(b, t, nh * cfg.v_head_dim)
+    return dense_apply(p["wo"], out), cache
+
+
+def attention_init(key, cfg: AttnConfig) -> dict:
+    return mla_init(key, cfg) if cfg.kind == "mla" else gqa_init(key, cfg)
+
+
+def attention_apply(p, cfg: AttnConfig, x, positions, cache=None,
+                    kv_len=None, return_kv=False):
+    fn = mla_apply if cfg.kind == "mla" else gqa_apply
+    return fn(p, cfg, x, positions, cache=cache, kv_len=kv_len,
+              return_kv=return_kv)
+
+
+def init_cache(cfg: AttnConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> dict:
+    if cfg.kind == "mla":
+        d = jnp.bfloat16 if dtype == jnp.int8 else dtype   # MLA: no int8
+        return {"c_kv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), d),
+                "k_rope": jnp.zeros((batch, max_len, cfg.qk_rope_dim), d)}
+    shp = (batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    if dtype == jnp.int8:
+        return {"k": jnp.zeros(shp, jnp.int8),
+                "v": jnp.zeros(shp, jnp.int8),
+                "k_scale": jnp.zeros(shp[:-1], jnp.float32),
+                "v_scale": jnp.zeros(shp[:-1], jnp.float32)}
+    return {"k": jnp.zeros(shp, dtype), "v": jnp.zeros(shp, dtype)}

@@ -1,0 +1,140 @@
+"""Minimal functional NN substrate (no flax/haiku available offline).
+
+Convention: every layer is a pair of pure functions
+    <layer>_init(key, ...) -> params-pytree (dict of jnp arrays, fp32)
+    <layer>_apply(params, x, ...) -> y
+Parameters stay fp32; compute casts to the caller's ``compute_dtype``
+(mixed-precision policy lives in the model, not here).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def he_uniform(key, shape, fan_in=None):
+    fan_in = fan_in or shape[0]
+    lim = float(np.sqrt(6.0 / fan_in))
+    return jax.random.uniform(key, shape, jnp.float32, -lim, lim)
+
+
+def normal_init(key, shape, stddev=0.02):
+    return jax.random.normal(key, shape, jnp.float32) * stddev
+
+
+# ---------------------------------------------------------------------------
+# dense / mlp
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, bias: bool = True,
+               scale: Optional[float] = None) -> dict:
+    kw, kb = jax.random.split(key)
+    w = (normal_init(kw, (d_in, d_out), scale) if scale is not None
+         else he_uniform(kw, (d_in, d_out)))
+    p = {"w": w}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), jnp.float32)
+    return p
+
+
+def dense_apply(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def mlp_init(key, dims: Sequence[int], bias: bool = True) -> list:
+    keys = jax.random.split(key, len(dims) - 1)
+    return [dense_init(k, dims[i], dims[i + 1], bias=bias)
+            for i, k in enumerate(keys)]
+
+
+def mlp_apply(layers: list, x: jnp.ndarray,
+              act: Callable = jax.nn.relu,
+              final_act: Optional[Callable] = None) -> jnp.ndarray:
+    for i, p in enumerate(layers):
+        x = dense_apply(p, x)
+        if i < len(layers) - 1:
+            x = act(x)
+        elif final_act is not None:
+            x = final_act(x)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def layer_norm_init(dim: int) -> dict:
+    return {"g": jnp.ones((dim,), jnp.float32),
+            "b": jnp.zeros((dim,), jnp.float32)}
+
+
+def layer_norm_apply(p: dict, x: jnp.ndarray, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["g"] + p["b"]).astype(x.dtype)
+
+
+def rms_norm_init(dim: int) -> dict:
+    return {"g": jnp.ones((dim,), jnp.float32)}
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _rms_norm(g: jnp.ndarray, x: jnp.ndarray, eps: float):
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt((xf * xf).mean(-1, keepdims=True) + eps)
+    return (y * g).astype(x.dtype)
+
+
+def _rms_fwd(g, x, eps):
+    return _rms_norm(g, x, eps), (g, x)
+
+
+def _rms_bwd(eps, res, ct):
+    # f32 internals, but the cotangent wrt x is RETURNED in x.dtype so the
+    # sharding boundary collectives around the norm move bf16, not f32
+    # (§Perf iteration; numerics identical to autodiff up to the final cast).
+    g, x = res
+    xf = x.astype(jnp.float32)
+    ctf = ct.astype(jnp.float32)
+    ms = (xf * xf).mean(-1, keepdims=True) + eps
+    r = jax.lax.rsqrt(ms)
+    dy = ctf * g                       # d/d(normalized x)
+    dg = (ctf * (xf * r)).sum(tuple(range(ct.ndim - 1)))
+    dx = r * (dy - xf * (dy * xf).mean(-1, keepdims=True) / ms)
+    return dg.astype(jnp.float32), dx.astype(x.dtype)
+
+
+_rms_norm.defvjp(_rms_fwd, _rms_bwd)
+
+
+def rms_norm_apply(p: dict, x: jnp.ndarray, eps: float = 1e-6):
+    return _rms_norm(p["g"], x, eps)
+
+
+def batch_norm_init(dim: int) -> dict:
+    # training-mode BN (batch statistics); GatedGCN benchmark default
+    return {"g": jnp.ones((dim,), jnp.float32),
+            "b": jnp.zeros((dim,), jnp.float32)}
+
+
+def batch_norm_apply(p: dict, x: jnp.ndarray, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    axes = tuple(range(xf.ndim - 1))
+    mu = xf.mean(axes, keepdims=True)
+    var = xf.var(axes, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["g"] + p["b"]).astype(x.dtype)

@@ -1,0 +1,177 @@
+"""Mixture-of-Experts FFN with two dispatch strategies.
+
+* ``dense`` — every expert processes every token, outputs gate-combined.
+  Exact (no capacity drops); O(E·N·f) compute — smoke tests + the oracle the
+  EP path is verified against.
+
+* ``ep`` — production expert parallelism under ``shard_map``: tokens are
+  sharded over (data, model); experts live on the `model` axis.  Sort-based
+  fixed-capacity dispatch: per-device top-k → argsort by expert →
+  position-in-expert via counts → scatter into an [E, C, d] buffer →
+  ``all_to_all`` over `model` → per-expert SwiGLU (stacked einsum, MXU) →
+  inverse ``all_to_all`` → unsort + gate-combine.  Capacity overflow drops
+  (GShard-style), logged via the aux outputs.
+
+Aux load-balance loss: Switch-style  E · Σ_e f_e · p̄_e.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.core import normal_init
+
+
+@dataclasses.dataclass(frozen=True)
+class MoeConfig:
+    d_model: int
+    d_ff: int                    # per-expert hidden
+    n_experts: int
+    top_k: int
+    n_shared: int = 0            # shared (always-on) experts
+    capacity_factor: float = 1.25
+    dispatch: str = "dense"      # "dense" | "ep"
+    router_aux_weight: float = 0.001
+
+
+def moe_init(key, cfg: MoeConfig) -> dict:
+    ks = jax.random.split(key, 5)
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff
+    p = {"router": normal_init(ks[0], (d, e), 0.02),
+         "w_gate": normal_init(ks[1], (e, d, f), 0.02),
+         "w_up": normal_init(ks[2], (e, d, f), 0.02),
+         "w_down": normal_init(ks[3], (e, f, d), 0.02)}
+    if cfg.n_shared:
+        fs = f * cfg.n_shared
+        kk = jax.random.split(ks[4], 3)
+        p["shared"] = {"w_gate": normal_init(kk[0], (d, fs), 0.02),
+                       "w_up": normal_init(kk[1], (d, fs), 0.02),
+                       "w_down": normal_init(kk[2], (fs, d), 0.02)}
+    return p
+
+
+def _router(p, cfg: MoeConfig, x: jnp.ndarray):
+    """x [N,d] -> (gates [N,k] normalized, idx [N,k], aux loss scalar)."""
+    logits = (x.astype(jnp.float32) @ p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    vals, idx = jax.lax.top_k(probs, cfg.top_k)
+    gates = vals / jnp.maximum(vals.sum(-1, keepdims=True), 1e-9)
+    # Switch aux: fraction of tokens per expert × mean router prob per expert
+    onehot = jax.nn.one_hot(idx[:, 0], cfg.n_experts, dtype=jnp.float32)
+    f_e = onehot.mean(0)
+    p_e = probs.mean(0)
+    aux = cfg.n_experts * jnp.sum(f_e * p_e)
+    return gates.astype(x.dtype), idx, aux
+
+
+def _swiglu(x, wg, wu, wd):
+    h = jax.nn.silu(x @ wg.astype(x.dtype)) * (x @ wu.astype(x.dtype))
+    return h @ wd.astype(x.dtype)
+
+
+def _shared_out(p, x):
+    # Shared-expert weights stay REPLICATED even in EP mode: tokens are
+    # sharded over the model axis there, so TP-sharding the shared expert
+    # would psum across *different* tokens. One expert's params are cheap.
+    s = p.get("shared")
+    if not s:
+        return 0.0
+    return _swiglu(x, s["w_gate"], s["w_up"], s["w_down"])
+
+
+def moe_apply_dense(p, cfg: MoeConfig, x: jnp.ndarray
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x [N, d] -> ([N, d], aux). Exact dense compute (oracle path)."""
+    n, d = x.shape
+    gates, idx, aux = _router(p, cfg, x)
+    # [E, N, f] — only viable for small smoke configs
+    h = jnp.einsum("nd,edf->enf", x, p["w_gate"].astype(x.dtype))
+    u = jnp.einsum("nd,edf->enf", x, p["w_up"].astype(x.dtype))
+    y_e = jnp.einsum("enf,efd->end", jax.nn.silu(h) * u,
+                     p["w_down"].astype(x.dtype))
+    combine = jnp.zeros((n, cfg.n_experts), x.dtype)
+    combine = combine.at[jnp.arange(n)[:, None], idx].add(gates)
+    y = jnp.einsum("ne,end->nd", combine, y_e)
+    return y + _shared_out(p, x), aux
+
+
+def moe_apply_ep(p, cfg: MoeConfig, x: jnp.ndarray, model_axis: str = "model",
+                 aux_axes: Tuple[str, ...] = ("model",)
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """EP dispatch body — call INSIDE shard_map.
+
+    x: [n_loc, d] this device's tokens.
+    p["w_*"]: local expert shards [E_loc, d, f] (sharded over model_axis);
+    p["router"], p["shared"]: replicated.
+    aux_axes: all shard_map axes, so the aux loss comes out replicated.
+    """
+    n_loc, d = x.shape
+    n_model = jax.lax.axis_size(model_axis)
+    e = cfg.n_experts
+    e_loc = e // n_model
+    k = cfg.top_k
+
+    gates, idx, aux = _router(p, cfg, x)
+    aux = jax.lax.pmean(aux, aux_axes)
+
+    n_slots = n_loc * k
+    cap = max(1, int(round(n_slots / e * cfg.capacity_factor)))
+
+    ea = idx.reshape(-1)                          # [n_slots] expert of slot
+    ga = gates.reshape(-1)
+    tok = jnp.arange(n_slots, dtype=jnp.int32) // k
+
+    order = jnp.argsort(ea)                       # stable
+    ea_s, tok_s, ga_s = ea[order], tok[order], ga[order]
+    counts = jnp.bincount(ea, length=e)
+    starts = jnp.concatenate([jnp.zeros(1, counts.dtype),
+                              jnp.cumsum(counts)[:-1]])
+    pos = jnp.arange(n_slots, dtype=jnp.int32) - starts[ea_s].astype(jnp.int32)
+    keep = pos < cap
+    dropped = (~keep).sum()
+
+    send = jnp.zeros((e, cap, d), x.dtype)
+    send = send.at[ea_s, jnp.where(keep, pos, cap)].set(
+        x[tok_s], mode="drop")
+
+    # exchange: [E, C, d] = [n_model*E_loc, C, d] → recv[i*E_loc+e'] is
+    # source shard i's tokens for my local expert e'
+    recv = jax.lax.all_to_all(send, model_axis, split_axis=0, concat_axis=0,
+                              tiled=True)
+    recv = recv.reshape(n_model, e_loc, cap, d).transpose(1, 0, 2, 3)
+    recv = recv.reshape(e_loc, n_model * cap, d)
+
+    h = jnp.einsum("esd,edf->esf", recv, p["w_gate"].astype(x.dtype))
+    u = jnp.einsum("esd,edf->esf", recv, p["w_up"].astype(x.dtype))
+    y = jnp.einsum("esf,efd->esd", jax.nn.silu(h) * u,
+                   p["w_down"].astype(x.dtype))
+
+    y = y.reshape(e_loc, n_model, cap, d).transpose(1, 0, 2, 3
+                                                    ).reshape(e, cap, d)
+    back = jax.lax.all_to_all(y, model_axis, split_axis=0, concat_axis=0,
+                              tiled=True)                    # [E, C, d]
+
+    gathered = back[ea_s, jnp.clip(pos, 0, cap - 1)]
+    gathered = jnp.where(keep[:, None], gathered, 0.0)
+    out = jnp.zeros((n_loc, d), x.dtype)
+    out = out.at[tok_s].add(gathered * ga_s[:, None])
+    return out + _shared_out(p, x), aux
+
+
+def moe_param_specs(cfg: MoeConfig, rules) -> dict:
+    """PartitionSpecs for shard_map in_specs (EP path)."""
+    from jax.sharding import PartitionSpec as P
+    ex = rules.get("expert")
+    p = {"router": P(None, None),
+         "w_gate": P(ex, None, None),
+         "w_up": P(ex, None, None),
+         "w_down": P(ex, None, None)}
+    if cfg.n_shared:
+        p["shared"] = {"w_gate": P(None, None),
+                       "w_up": P(None, None),
+                       "w_down": P(None, None)}
+    return p

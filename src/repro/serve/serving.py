@@ -1,0 +1,63 @@
+"""Serving utilities: a latency-bounded micro-batcher and score servers.
+
+The dry-run covers the pod-scale serving shapes (serve_p99 / serve_bulk /
+retrieval_cand / prefill / decode); this module is the host-side glue a
+deployment wraps around the jitted step functions.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class MicroBatcher:
+    """Collects requests into fixed-size batches (padding the tail) so the
+    jitted scoring function compiles once.  max_wait_ms bounds p99 latency.
+    """
+    batch_size: int
+    score_fn: Callable[[dict], np.ndarray]
+    max_wait_ms: float = 2.0
+    _queue: List[dict] = dataclasses.field(default_factory=list)
+
+    def submit(self, request: dict) -> None:
+        self._queue.append(request)
+
+    def flush(self) -> List[np.ndarray]:
+        out: List[np.ndarray] = []
+        while self._queue:
+            chunk = self._queue[:self.batch_size]
+            self._queue = self._queue[self.batch_size:]
+            n = len(chunk)
+            batch = {k: np.stack([c[k] for c in chunk]) for k in chunk[0]}
+            if n < self.batch_size:          # pad to the compiled shape
+                pad = self.batch_size - n
+                batch = {k: np.concatenate(
+                    [v, np.repeat(v[-1:], pad, axis=0)]) for k, v in
+                    batch.items()}
+            scores = np.asarray(self.score_fn(
+                {k: jnp.asarray(v) for k, v in batch.items()}))
+            out.extend(scores[:n])
+        return out
+
+
+def latency_profile(fn: Callable, batch: dict, iters: int = 32) -> dict:
+    """p50/p95/p99 wall latency of a jitted scoring function."""
+    jb = {k: jnp.asarray(v) for k, v in batch.items()}
+    r = fn(jb)
+    jax.tree.leaves(r)[0].block_until_ready()
+    lats = []
+    for _ in range(iters):
+        t0 = time.monotonic()
+        r = fn(jb)
+        jax.tree.leaves(r)[0].block_until_ready()
+        lats.append((time.monotonic() - t0) * 1e3)
+    lats = np.sort(np.asarray(lats))
+    q = lambda p: float(lats[min(len(lats) - 1, int(len(lats) * p))])
+    return {"p50_ms": q(0.5), "p95_ms": q(0.95), "p99_ms": q(0.99)}

@@ -1,0 +1,81 @@
+"""Gradient compression for the data-parallel all-reduce.
+
+The paper's headline systems win is shrinking the DP gradient volume 1000×
+(the ROBE array is the model).  On top of that we implement the standard
+distributed-optimization tricks:
+
+* ``bf16``  — cast-compressed all-reduce with fp32 **error feedback** (the
+  quantization residual is carried in the train state and re-added next
+  step, so compression bias does not accumulate).
+* ``int8``  — per-tensor max-scaled int8 quantized all-reduce + EF.
+* ``none``  — plain fp32 psum.
+
+These run inside ``shard_map`` over the DP axes (the model axis keeps its
+GSPMD collectives).  ZeRO-1-style optimizer-state sharding is expressed by
+param/opt-state shardings in the launcher (see configs), not here.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def compressed_psum(grads, residual, axes, method: str = "none"):
+    """All-reduce ``grads`` over mesh ``axes`` with optional compression.
+
+    residual: pytree like grads (fp32) carrying error feedback, or None.
+    Returns (reduced grads fp32, new residual).
+    """
+    n = 1
+    for a in (axes if isinstance(axes, (tuple, list)) else (axes,)):
+        n *= jax.lax.axis_size(a)
+
+    if method == "none":
+        out = jax.tree.map(
+            lambda g: jax.lax.psum(g.astype(jnp.float32), axes) / n, grads)
+        return out, residual
+
+    if method == "bf16":
+        def one(g, r):
+            gf = g.astype(jnp.float32) + (r if r is not None else 0.0)
+            q = gf.astype(jnp.bfloat16)
+            new_r = gf - q.astype(jnp.float32)
+            red = jax.lax.psum(q, axes).astype(jnp.float32) / n
+            return red, new_r
+        if residual is None:
+            residual = jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32),
+                                    grads)
+        pairs = jax.tree.map(one, grads, residual)
+        out = jax.tree.map(lambda p: p[0], pairs,
+                           is_leaf=lambda x: isinstance(x, tuple))
+        new_res = jax.tree.map(lambda p: p[1], pairs,
+                               is_leaf=lambda x: isinstance(x, tuple))
+        return out, new_res
+
+    if method == "int8":
+        def one(g, r):
+            gf = g.astype(jnp.float32) + (r if r is not None else 0.0)
+            # shared scale via a scalar pmax so every shard quantizes onto
+            # the same grid and the int sum reconstructs exactly
+            scale = jax.lax.pmax(
+                jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0, axes)
+            q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+            new_r = gf - q.astype(jnp.float32) * scale
+            # int accumulation (values ≤ 127·n_shards; int8 payload on the
+            # wire in a packed deployment — int32 accumulator here)
+            red = jax.lax.psum(q.astype(jnp.int32), axes)
+            return red.astype(jnp.float32) * scale / n, new_r
+        if residual is None:
+            residual = jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32),
+                                    grads)
+        pairs = jax.tree.map(one, grads, residual)
+        out = jax.tree.map(lambda p: p[0], pairs,
+                           is_leaf=lambda x: isinstance(x, tuple))
+        new_res = jax.tree.map(lambda p: p[1], pairs,
+                               is_leaf=lambda x: isinstance(x, tuple))
+        return out, new_res
+
+    raise ValueError(f"unknown compression {method}")

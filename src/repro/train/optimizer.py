@@ -1,0 +1,210 @@
+"""Optimizers (no optax offline): SGD(+momentum), Adagrad, Adam/AdamW,
+Adafactor-lite.  All operate on parameter pytrees; moment dtype is
+configurable (bf16 moments = the memory lever for the 1T-param cell).
+
+API:  opt = make_optimizer(cfg);  state = opt.init(params);
+      params, state = opt.update(params, grads, state, step)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    kind: str = "adam"            # sgd | adagrad | adam | adamw | adafactor
+    lr: float = 1e-3
+    momentum: float = 0.0
+    beta1: float = 0.9
+    beta2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    moment_dtype: Any = jnp.float32   # bf16 halves optimizer memory
+    master_weights: bool = False  # fp32 master copy for bf16 params: the
+    # grad all-reduce then moves bf16 (half wire) with fp32 update accuracy
+    update_scan_dim0: int = 0     # leaves with shape[0] ≥ this are updated
+    # via lax.scan over dim 0 — bounds the f32 update temporaries to one
+    # slice (the 1T stacked-expert leaves otherwise cost ~20 GB f32 each)
+    grad_clip: float = 0.0
+    warmup_steps: int = 0
+    decay_steps: int = 0          # 0 = constant after warmup
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    cfg: OptimizerConfig
+    init: Callable
+    update: Callable
+
+
+def schedule(cfg: OptimizerConfig, step) -> jnp.ndarray:
+    lr = jnp.asarray(cfg.lr, jnp.float32)
+    s = jnp.asarray(step, jnp.float32)
+    if cfg.warmup_steps:
+        lr = lr * jnp.minimum(1.0, (s + 1) / cfg.warmup_steps)
+    if cfg.decay_steps:
+        frac = jnp.clip((s - cfg.warmup_steps)
+                        / max(1, cfg.decay_steps - cfg.warmup_steps), 0, 1)
+        lr = lr * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return lr
+
+
+def _clip(grads, max_norm: float):
+    if not max_norm:
+        return grads
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+
+
+def make_optimizer(cfg: OptimizerConfig) -> Optimizer:
+    k = cfg.kind
+
+    if k == "sgd":
+        def init(params):
+            if cfg.momentum:
+                return {"m": jax.tree.map(
+                    lambda p: jnp.zeros_like(p, cfg.moment_dtype), params)}
+            return {}
+
+        def update(params, grads, state, step):
+            grads = _clip(grads, cfg.grad_clip)
+            lr = schedule(cfg, step)
+            if cfg.momentum:
+                m = jax.tree.map(
+                    lambda mm, g: (cfg.momentum * mm.astype(jnp.float32)
+                                   + g.astype(jnp.float32)
+                                   ).astype(cfg.moment_dtype),
+                    state["m"], grads)
+                params = jax.tree.map(
+                    lambda p, mm: p - lr * mm.astype(p.dtype), params, m)
+                return params, {"m": m}
+            params = jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype),
+                                  params, grads)
+            return params, state
+        return Optimizer(cfg, init, update)
+
+    if k == "adagrad":
+        def init(params):
+            return {"v": jax.tree.map(
+                lambda p: jnp.zeros_like(p, cfg.moment_dtype), params)}
+
+        def update(params, grads, state, step):
+            grads = _clip(grads, cfg.grad_clip)
+            lr = schedule(cfg, step)
+            v = jax.tree.map(
+                lambda vv, g: (vv.astype(jnp.float32)
+                               + jnp.square(g.astype(jnp.float32))
+                               ).astype(cfg.moment_dtype),
+                state["v"], grads)
+            params = jax.tree.map(
+                lambda p, g, vv: p - lr * g.astype(jnp.float32)
+                / (jnp.sqrt(vv.astype(jnp.float32)) + cfg.eps),
+                params, grads, v)
+            return params, {"v": v}
+        return Optimizer(cfg, init, update)
+
+    if k in ("adam", "adamw"):
+        def init(params):
+            z = lambda p: jnp.zeros_like(p, cfg.moment_dtype)
+            st = {"m": jax.tree.map(z, params),
+                  "v": jax.tree.map(z, params)}
+            if cfg.master_weights:
+                st["master"] = jax.tree.map(
+                    lambda p: p.astype(jnp.float32), params)
+            return st
+
+        def update(params, grads, state, step):
+            grads = _clip(grads, cfg.grad_clip)
+            lr = schedule(cfg, step)
+            t = jnp.asarray(step, jnp.float32) + 1
+            bc1 = 1 - cfg.beta1 ** t
+            bc2 = 1 - cfg.beta2 ** t
+            base = state.get("master", params)
+
+            def one(p0, g, mm, vv):
+                mf = (cfg.beta1 * mm.astype(jnp.float32)
+                      + (1 - cfg.beta1) * g.astype(jnp.float32))
+                vf = (cfg.beta2 * vv.astype(jnp.float32)
+                      + (1 - cfg.beta2) * jnp.square(g.astype(jnp.float32)))
+                d = (mf / bc1) / (jnp.sqrt(vf / bc2) + cfg.eps)
+                if k == "adamw" and cfg.weight_decay:
+                    d = d + cfg.weight_decay * p0.astype(jnp.float32)
+                nm = (p0.astype(jnp.float32) - lr * d).astype(p0.dtype)
+                return (nm, mf.astype(cfg.moment_dtype),
+                        vf.astype(cfg.moment_dtype))
+
+            def leaf(p0, g, mm, vv):
+                if cfg.update_scan_dim0 and p0.ndim >= 2 \
+                        and p0.shape[0] >= cfg.update_scan_dim0:
+                    # elementwise update scanned over dim 0: f32 temps are
+                    # bounded to one slice (the 1T stacked-expert lever)
+                    def body(_, args):
+                        return None, one(*args)
+                    _, out = jax.lax.scan(body, None, (p0, g, mm, vv))
+                    return out
+                return one(p0, g, mm, vv)
+
+            out = jax.tree.map(leaf, base, grads, state["m"], state["v"])
+            new_master = jax.tree.map(lambda o: o[0], out,
+                                      is_leaf=lambda x: isinstance(x, tuple))
+            m = jax.tree.map(lambda o: o[1], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+            v = jax.tree.map(lambda o: o[2], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+            new_params = jax.tree.map(
+                lambda nm, p: nm.astype(p.dtype), new_master, params)
+            st = {"m": m, "v": v}
+            if cfg.master_weights:
+                st["master"] = new_master
+            return new_params, st
+        return Optimizer(cfg, init, update)
+
+    if k == "adafactor":
+        # factored second moment (rows/cols) for ≥2D params; first moment off
+        def init(params):
+            def st(p):
+                if p.ndim >= 2:
+                    return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                            "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                            jnp.float32)}
+                return {"v": jnp.zeros_like(p, jnp.float32)}
+            return {"f": jax.tree.map(st, params,
+                                      is_leaf=lambda x: hasattr(x, "ndim"))}
+
+        def update(params, grads, state, step):
+            grads = _clip(grads, cfg.grad_clip)
+            lr = schedule(cfg, step)
+            b2 = 1.0 - (jnp.asarray(step, jnp.float32) + 1) ** -0.8
+
+            def upd(p, g, s):
+                g = g.astype(jnp.float32)
+                if p.ndim >= 2:
+                    vr = b2 * s["vr"] + (1 - b2) * jnp.mean(g * g, -1)
+                    vc = b2 * s["vc"] + (1 - b2) * jnp.mean(g * g, -2)
+                    r = vr / jnp.maximum(
+                        jnp.mean(vr, -1, keepdims=True), 1e-30)
+                    d = g / (jnp.sqrt(r)[..., None]
+                             * jnp.sqrt(vc)[..., None, :] + cfg.eps)
+                    return ((p.astype(jnp.float32) - lr * d).astype(p.dtype),
+                            {"vr": vr, "vc": vc})
+                v = b2 * s["v"] + (1 - b2) * g * g
+                return ((p.astype(jnp.float32)
+                         - lr * g / (jnp.sqrt(v) + cfg.eps)).astype(p.dtype),
+                        {"v": v})
+
+            flat_p, tdef = jax.tree.flatten(params)
+            flat_g = tdef.flatten_up_to(grads)
+            flat_s = tdef.flatten_up_to(state["f"])
+            out = [upd(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+            params = tdef.unflatten([o[0] for o in out])
+            return params, {"f": tdef.unflatten([o[1] for o in out])}
+        return Optimizer(cfg, init, update)
+
+    raise ValueError(f"unknown optimizer {k}")

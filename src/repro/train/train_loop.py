@@ -1,0 +1,209 @@
+"""Train-step builder + fault-tolerant runner.
+
+``build_train_step`` returns one jitted function:
+    state, metrics = step_fn(state, batch)
+with gradient accumulation (microbatching via lax.scan), mixed precision
+(params fp32, compute bf16 per model config), NaN guarding, and — when a
+DP-compression method is selected — per-shard grads reduced through
+``compressed_psum`` under shard_map.
+
+``run`` is the production loop: checkpoint every k steps (async, atomic),
+auto-resume (incl. onto a different mesh = elastic), NaN → restore + skip
+batch, straggler monitor (step-time EWMA), bounded restarts on exceptions.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist import api as dist
+from repro.train import checkpoint as ckpt_lib
+from repro.train.compression import compressed_psum
+from repro.train.optimizer import Optimizer
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    grad_accum: int = 1
+    checkpoint_every: int = 100
+    keep_last: int = 3
+    max_restarts: int = 3
+    log_every: int = 10
+    grad_compression: str = "none"       # none | bf16 | int8
+    straggler_factor: float = 3.0        # step > f × EWMA ⇒ flagged
+
+
+def build_train_step(loss_fn: Callable, optimizer: Optimizer,
+                     cfg: TrainConfig) -> Callable:
+    """loss_fn(params, batch) -> (loss, metrics dict of scalars)."""
+
+    def grads_of(params, batch):
+        if cfg.grad_accum > 1:
+            def micro(carry, mb):
+                (l, g) = jax.value_and_grad(
+                    lambda p: loss_fn(p, mb)[0])(params)
+                return (carry[0] + l,
+                        jax.tree.map(jnp.add, carry[1], g)), None
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                params)
+            mbs = jax.tree.map(
+                lambda x: x.reshape((cfg.grad_accum,
+                                     x.shape[0] // cfg.grad_accum)
+                                    + x.shape[1:]), batch)
+            (loss, grads), _ = jax.lax.scan(micro, (0.0, zero), mbs)
+            inv = 1.0 / cfg.grad_accum
+            return loss * inv, jax.tree.map(lambda g: g * inv, grads)
+        loss, grads = jax.value_and_grad(lambda p: loss_fn(p, batch)[0]
+                                         )(params)
+        return loss, grads
+
+    def step_fn(state, batch):
+        params, opt_state, step = state["params"], state["opt"], state["step"]
+        if cfg.grad_compression != "none":
+            ctx = dist.current()
+            assert ctx is not None, "compression needs a mesh"
+            from jax.sharding import PartitionSpec as P
+            dp = ctx.dp_axes
+
+            def body(p, mb, res):
+                # res leaves carry a leading per-DP-shard axis of size 1 here
+                res = jax.tree.map(lambda r: r[0], res)
+                loss, g = grads_of(p, mb)
+                loss = jax.lax.pmean(loss, dp)
+                g, res = compressed_psum(g, res, dp, cfg.grad_compression)
+                res = jax.tree.map(lambda r: r[None], res)
+                return loss, g, res
+
+            pspec = jax.tree.map(lambda _: P(), params)
+            bspec = jax.tree.map(lambda _: P(dp), batch)
+            efspec = jax.tree.map(lambda _: P(dp), state["ef"])
+            loss, grads, ef = jax.shard_map(
+                body, mesh=ctx.mesh,
+                in_specs=(pspec, bspec, efspec),
+                out_specs=(P(), pspec, efspec),
+                check_vma=False)(params, batch, state["ef"])
+            state = dict(state, ef=ef)
+        else:
+            loss, grads = grads_of(params, batch)
+
+        # NaN guard: skip the update if any grad is non-finite
+        finite = jnp.isfinite(loss)
+        for g in jax.tree.leaves(grads):
+            finite &= jnp.all(jnp.isfinite(g))
+        new_params, new_opt = optimizer.update(params, grads, opt_state, step)
+        params = jax.tree.map(
+            lambda new, old: jnp.where(finite, new, old), new_params, params)
+        opt_state = jax.tree.map(
+            lambda new, old: jnp.where(finite, new, old), new_opt, opt_state)
+        state = dict(state, params=params, opt=opt_state, step=step + 1)
+        return state, {"loss": loss, "finite": finite.astype(jnp.float32)}
+
+    return jax.jit(step_fn, donate_argnums=(0,))
+
+
+def init_state(params, optimizer: Optimizer, cfg: TrainConfig) -> dict:
+    state = {"params": params, "opt": optimizer.init(params),
+             "step": jnp.zeros((), jnp.int32)}
+    if cfg.grad_compression != "none":
+        ctx = dist.current()
+        n_dp = 1
+        if ctx is not None:
+            for a in ctx.dp_axes:
+                n_dp *= ctx.mesh.shape[a]
+        # error-feedback residual: one fp32 copy per DP shard (leading axis
+        # sharded over dp — per-device it is a single model-sized buffer)
+        state["ef"] = jax.tree.map(
+            lambda p: jnp.zeros((n_dp,) + p.shape, jnp.float32), params)
+    return state
+
+
+@dataclasses.dataclass
+class RunReport:
+    steps_done: int
+    final_loss: float
+    restarts: int
+    nan_events: int
+    straggler_steps: int
+    losses: list
+    state: dict = None       # final train state (donation-safe handle)
+
+
+def run(state, step_fn: Callable, batch_at: Callable[[int], dict],
+        n_steps: int, cfg: TrainConfig,
+        ckpt_dir: Optional[str] = None,
+        inject_fault_at: Optional[int] = None) -> RunReport:
+    """Fault-tolerant training loop (single-controller).
+
+    ``batch_at(step)`` must be a pure function of step (resume correctness).
+    ``inject_fault_at``: raise a simulated node failure at that step once
+    (test hook used by tests/test_fault.py).
+    """
+    saver = ckpt_lib.AsyncCheckpointer(ckpt_dir, cfg.keep_last) \
+        if ckpt_dir else None
+    restarts = 0
+    nan_events = 0
+    straggler_steps = 0
+    ewma = None
+    losses: list = []
+    injected = {"done": False}
+
+    start = int(jax.device_get(state["step"]))
+    if ckpt_dir:
+        restored = ckpt_lib.restore_latest(ckpt_dir, state)
+        if restored is not None:
+            state, manifest = restored
+            start = int(manifest["step"])
+
+    step = start
+    while step < n_steps:
+        try:
+            if inject_fault_at is not None and step == inject_fault_at \
+                    and not injected["done"]:
+                injected["done"] = True
+                raise RuntimeError("injected node failure")
+            t0 = time.monotonic()
+            batch = {k: jnp.asarray(v) for k, v in batch_at(step).items()}
+            state, metrics = step_fn(state, batch)
+            loss = float(jax.device_get(metrics["loss"]))
+            dt = time.monotonic() - t0
+            ewma = dt if ewma is None else 0.9 * ewma + 0.1 * dt
+            if dt > cfg.straggler_factor * ewma and step > start + 3:
+                straggler_steps += 1    # real pods: trigger re-slice here
+            if not np.isfinite(loss):
+                nan_events += 1
+                if ckpt_dir:
+                    restored = ckpt_lib.restore_latest(ckpt_dir, state)
+                    if restored is not None:
+                        state, manifest = restored
+                step += 1               # skip the poisoned batch
+                continue
+            losses.append(loss)
+            step += 1
+            if saver and step % cfg.checkpoint_every == 0:
+                saver.save(step, state)
+        except KeyboardInterrupt:
+            raise
+        except BaseException:
+            restarts += 1
+            if restarts > cfg.max_restarts:
+                raise
+            if ckpt_dir:
+                restored = ckpt_lib.restore_latest(ckpt_dir, state)
+                if restored is not None:
+                    state, manifest = restored
+                    step = int(manifest["step"])
+            continue
+    if saver:
+        saver.save(step, state)
+        saver.wait()
+    return RunReport(steps_done=step - start,
+                     final_loss=losses[-1] if losses else float("nan"),
+                     restarts=restarts, nan_events=nan_events,
+                     straggler_steps=straggler_steps, losses=losses,
+                     state=state)

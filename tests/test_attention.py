@@ -1,0 +1,126 @@
+"""Attention invariants: chunked == unchunked, decode == full forward,
+MLA absorbed decode == expanded form."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.transformer import (TransformerConfig, decode_step,
+                                      forward, init_cache, init_params)
+from repro.nn.attention import chunked_attention
+
+
+def test_chunked_equals_unchunked():
+    rs = np.random.RandomState(0)
+    b, t, h, kv, d = 2, 64, 8, 4, 16
+    q = jnp.asarray(rs.randn(b, t, h, d), jnp.float32)
+    k = jnp.asarray(rs.randn(b, t, kv, d), jnp.float32)
+    v = jnp.asarray(rs.randn(b, t, kv, d), jnp.float32)
+    full = chunked_attention(q, k, v, kv, 0)
+    chunked = chunked_attention(q, k, v, kv, 16)
+    np.testing.assert_allclose(np.asarray(chunked), np.asarray(full),
+                               rtol=1e-5, atol=1e-5)
+
+
+def _decode_matches(cfg, atol):
+    p = init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0, cfg.vocab)
+    full, _ = forward(p, cfg, toks)
+    cache = init_cache(cfg, 2, 12)
+    outs = []
+    for t in range(12):
+        lg, cache = decode_step(p, cfg, cache, toks[:, t:t + 1], t)
+        outs.append(lg)
+    dec = jnp.stack(outs, axis=1)
+    err = float(jnp.max(jnp.abs(dec - full)))
+    assert err < atol, err
+
+
+def test_gqa_decode_matches_forward():
+    cfg = TransformerConfig(
+        name="t", n_layers=2, d_model=48, n_heads=4, n_kv_heads=2,
+        head_dim=12, d_ff=96, vocab=128, qk_norm=True, q_chunk=4,
+        compute_dtype=jnp.float32, cache_dtype=jnp.float32, remat=False)
+    _decode_matches(cfg, 2e-4)
+
+
+def test_mla_absorbed_decode_matches_expanded_forward():
+    cfg = TransformerConfig(
+        name="m", n_layers=2, d_model=48, n_heads=4, n_kv_heads=4,
+        head_dim=12, d_ff=96, vocab=128, attn_kind="mla", q_lora_rank=24,
+        kv_lora_rank=16, qk_nope_dim=12, qk_rope_dim=8, v_head_dim=12,
+        q_chunk=0, compute_dtype=jnp.float32, cache_dtype=jnp.float32,
+        remat=False)
+    _decode_matches(cfg, 2e-4)
+
+
+def test_qkv_bias_decode_matches():
+    cfg = TransformerConfig(
+        name="b", n_layers=2, d_model=32, n_heads=4, n_kv_heads=4,
+        head_dim=8, d_ff=64, vocab=64, qkv_bias=True, q_chunk=0,
+        compute_dtype=jnp.float32, cache_dtype=jnp.float32, remat=False)
+    _decode_matches(cfg, 2e-4)
+
+
+def test_prefill_cache_matches_decode_cache():
+    """forward(collect_cache) then one decode step == decoding all along."""
+    cfg = TransformerConfig(
+        name="p", n_layers=2, d_model=32, n_heads=4, n_kv_heads=2,
+        head_dim=8, d_ff=64, vocab=64, q_chunk=0,
+        compute_dtype=jnp.float32, cache_dtype=jnp.float32, remat=False)
+    p = init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 9), 0, 64)
+    logits_last, _, cache = forward(p, cfg, toks[:, :8], collect_cache=True,
+                                    logits_mode="last")
+    # pad prefill cache [B,8,..] to the decode buffer length 9
+    cache = jax.tree.map(
+        lambda x: jnp.pad(x, [(0, 0), (0, 0), (0, 1)] +
+                          [(0, 0)] * (x.ndim - 3)), cache)
+    lg, _ = decode_step(p, cfg, cache, toks[:, 8:9], 8)
+    full, _ = forward(p, cfg, toks)
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(full[:, -1]),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(logits_last),
+                               np.asarray(full[:, 7]), rtol=1e-4, atol=1e-4)
+
+
+def test_remat_does_not_change_loss():
+    from repro.models.transformer import loss_fn
+    kw = dict(name="r", n_layers=3, d_model=32, n_heads=4, n_kv_heads=2,
+              head_dim=8, d_ff=64, vocab=64, q_chunk=0,
+              compute_dtype=jnp.float32)
+    toks = jax.random.randint(jax.random.PRNGKey(2), (2, 8), 0, 64)
+    batch = {"tokens": toks, "labels": toks}
+    cfg1 = TransformerConfig(**kw, remat=False)
+    cfg2 = TransformerConfig(**kw, remat=True)
+    p = init_params(jax.random.PRNGKey(0), cfg1)
+    l1 = loss_fn(p, cfg1, batch)[0]
+    l2 = loss_fn(p, cfg2, batch)[0]
+    g1 = jax.grad(lambda pp: loss_fn(pp, cfg1, batch)[0])(p)
+    g2 = jax.grad(lambda pp: loss_fn(pp, cfg2, batch)[0])(p)
+    assert float(jnp.abs(l1 - l2)) < 1e-6
+    err = jax.tree.reduce(max, jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a - b))), g1, g2))
+    assert err < 1e-5
+
+
+def test_int8_kv_cache_decode_close_to_forward():
+    """Quantized KV cache (4× less decode HBM sweep) stays within
+    quantization error of the exact forward pass."""
+    cfg = TransformerConfig(
+        name="q8", n_layers=2, d_model=48, n_heads=4, n_kv_heads=2,
+        head_dim=12, d_ff=96, vocab=128, q_chunk=0,
+        compute_dtype=jnp.float32, cache_dtype=jnp.int8, remat=False)
+    p = init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0, 128)
+    full, _ = forward(p, cfg, toks)
+    cache = init_cache(cfg, 2, 12)
+    assert cache["layers"]["k"].dtype == jnp.int8
+    outs = []
+    for t in range(12):
+        lg, cache = decode_step(p, cfg, cache, toks[:, t:t + 1], t)
+        outs.append(lg)
+    dec = jnp.stack(outs, axis=1)
+    err = float(jnp.max(jnp.abs(dec - full)))
+    assert err < 0.05, err          # int8 quantization error bound

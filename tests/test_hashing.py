@@ -1,0 +1,69 @@
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.hashing import M31, UHash, add64, mod_m31, mul32, split31
+
+U32 = st.integers(min_value=0, max_value=2**32 - 1)
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.lists(U32, min_size=1, max_size=32),
+       st.lists(U32, min_size=1, max_size=32))
+def test_mul32_exact(avals, bvals):
+    n = min(len(avals), len(bvals))
+    a = np.asarray(avals[:n], np.uint32)
+    b = np.asarray(bvals[:n], np.uint32)
+    hi, lo = mul32(jnp.array(a), jnp.array(b))
+    prod = [int(x) * int(y) for x, y in zip(a, b)]
+    assert [int(v) for v in np.asarray(hi)] == [p >> 32 for p in prod]
+    assert [int(v) for v in np.asarray(lo)] == [p & 0xFFFFFFFF for p in prod]
+
+
+@settings(max_examples=200, deadline=None)
+@given(U32, U32)
+def test_mod_m31_exact(hi, lo):
+    got = int(np.asarray(mod_m31(jnp.uint32(hi), jnp.uint32(lo))))
+    want = ((hi << 32) + lo) % 0x7FFFFFFF
+    assert got == want
+
+
+@settings(max_examples=100, deadline=None)
+@given(U32, U32, st.integers(min_value=0, max_value=2**31 - 1))
+def test_add64_carry(hi, lo, c):
+    h2, l2 = add64(jnp.uint32(hi), jnp.uint32(lo), jnp.uint32(c))
+    total = (hi << 32) + lo + c
+    assert int(np.asarray(h2)) == (total >> 32) % 2**32
+    assert int(np.asarray(l2)) == total & 0xFFFFFFFF
+
+
+@settings(max_examples=50, deadline=None)
+@given(U32, U32)
+def test_split31_reconstruct(hi, lo):
+    d2, d1, d0 = split31(jnp.uint32(hi), jnp.uint32(lo))
+    v = (int(np.asarray(d2)) << 62) | (int(np.asarray(d1)) << 31) \
+        | int(np.asarray(d0))
+    assert v == (hi << 32) + lo
+
+
+def test_uhash_range_and_determinism():
+    h = UHash.draw(seed=3, m=1000)
+    keys = jnp.arange(10000, dtype=jnp.uint32)
+    z = jnp.zeros_like(keys)
+    out1 = np.asarray(h(z, z, keys))
+    out2 = np.asarray(h(z, z, keys))
+    assert (out1 == out2).all()
+    assert out1.min() >= 0 and out1.max() < 1000
+    # roughly uniform occupancy
+    counts = np.bincount(out1, minlength=1000)
+    assert counts.max() < 60          # E[count]=10
+
+
+def test_uhash_table_id_separates():
+    h = UHash.draw(seed=3, m=1 << 20)
+    keys = jnp.arange(1000, dtype=jnp.uint32)
+    z = jnp.zeros_like(keys)
+    a = np.asarray(h(z, z, keys))
+    b = np.asarray(h(z + 1, z, keys))
+    assert (a != b).mean() > 0.99

@@ -1,0 +1,101 @@
+"""Dry-run tooling units: HLO collective parsing, wire model, cell registry,
+serving batcher, elastic checkpoint resume."""
+
+import shutil
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.dryrun import parse_collectives, wire_bytes, _shape_bytes
+
+
+HLO_SAMPLE = """
+  %all-gather.3 = f32[152064,1024]{1,0} all-gather(%p0), replica_groups={}
+  %ar = (f32[16,4096,1024]{2,1,0}, f32[16,4096,1024]{2,1,0}) all-reduce(%a, %b), to_apply=%add
+  %a2a.1 = bf16[384,107,7168]{2,1,0} all-to-all(%send), dimensions={0}
+  ROOT %rs = bf16[64,26,64]{2,1,0} reduce-scatter(%part), dimensions={0}
+  %not_a_coll = f32[2,2]{1,0} add(%x, %y)
+"""
+
+
+def test_parse_collectives_counts_and_bytes():
+    c = parse_collectives(HLO_SAMPLE)
+    assert c["all-gather"]["count"] == 1
+    assert c["all-gather"]["bytes"] == 152064 * 1024 * 4
+    assert c["all-reduce"]["count"] == 1
+    assert c["all-reduce"]["bytes"] == 2 * 16 * 4096 * 1024 * 4   # tuple
+    assert c["all-to-all"]["bytes"] == 384 * 107 * 7168 * 2
+    assert c["reduce-scatter"]["count"] == 1
+    assert "add" not in c
+    # ring factors: AR ×2, others ×1
+    w = wire_bytes(c)
+    expect = (c["all-gather"]["bytes"] + 2 * c["all-reduce"]["bytes"]
+              + c["all-to-all"]["bytes"] + c["reduce-scatter"]["bytes"])
+    assert w == expect
+
+
+def test_shape_bytes_scalar_and_tuple():
+    assert _shape_bytes("f32[]") == 4
+    assert _shape_bytes("bf16[8,2]") == 32
+    assert _shape_bytes("(s32[4], pred[8])") == 24
+
+
+def test_registry_covers_all_assigned_cells():
+    from repro.configs import all_arch_ids, get_arch
+    assert len(all_arch_ids()) == 10
+    total_cells = sum(len(get_arch(a).shapes) for a in all_arch_ids())
+    assert total_cells == 40
+
+
+def test_micro_batcher_pads_and_orders():
+    from repro.serve.serving import MicroBatcher
+    calls = []
+
+    def score(batch):
+        calls.append(batch["x"].shape)
+        return jnp.asarray(batch["x"][:, 0], jnp.float32)
+
+    mb = MicroBatcher(batch_size=4, score_fn=score)
+    for i in range(6):
+        mb.submit({"x": np.asarray([i, 0], np.float32)})
+    out = mb.flush()
+    assert len(out) == 6
+    assert [float(o) for o in out] == [0, 1, 2, 3, 4, 5]
+    assert all(s == (4, 2) for s in calls)       # fixed compiled shape
+
+
+def test_elastic_checkpoint_resume_across_shapes():
+    """A checkpoint written under one 'mesh' restores onto another: arrays
+    are saved in logical shapes, the loader re-applies new shardings."""
+    from repro.train import checkpoint as ck
+    tmp = tempfile.mkdtemp()
+    try:
+        tree = {"w": jnp.arange(32.0).reshape(8, 4), "step": jnp.int32(7)}
+        ck.save(tmp, 7, tree)
+        # "new mesh": single-device shardings (CPU) — device_put path
+        shardings = jax.tree.map(
+            lambda x: jax.sharding.SingleDeviceSharding(jax.devices()[0]),
+            tree)
+        restored, manifest = ck.restore_latest(tmp, tree,
+                                               shardings=shardings)
+        assert manifest["step"] == 7
+        np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                      np.arange(32.0).reshape(8, 4))
+    finally:
+        shutil.rmtree(tmp)
+
+
+def test_robe_lookup_bag_weighted():
+    from repro.core.robe import RobeSpec, init_memory, robe_lookup, \
+        robe_lookup_bag
+    spec = RobeSpec(size=512, block_size=8, seed=0)
+    mem = init_memory(jax.random.PRNGKey(0), spec)
+    rows = jnp.asarray([[[2, 5]]], jnp.int32)
+    w = jnp.asarray([[[0.25, 0.75]]], jnp.float32)
+    out = robe_lookup_bag(mem, spec, jnp.asarray([[0]]), rows, 8, weights=w)
+    e2 = robe_lookup(mem, spec, 0, jnp.asarray([2]), 8)[0]
+    e5 = robe_lookup(mem, spec, 0, jnp.asarray([5]), 8)[0]
+    np.testing.assert_allclose(np.asarray(out[0, 0]),
+                               np.asarray(0.25 * e2 + 0.75 * e5), atol=1e-6)

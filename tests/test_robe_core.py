@@ -1,0 +1,92 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.robe import (RobeSpec, init_memory, robe_lookup,
+                             robe_lookup_bag, robe_slots, robe_signs,
+                             sketch_vector, unsketch_vector)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.sampled_from([1, 2, 8, 32, 128]),
+       st.integers(min_value=2, max_value=64),
+       st.integers(min_value=0, max_value=50))
+def test_slots_in_range_and_deterministic(z, dim, seed):
+    spec = RobeSpec(size=4096, block_size=z, seed=seed)
+    rows = jnp.array([0, 1, 5, 10**6, 2**28], jnp.int32)
+    s1 = np.asarray(robe_slots(spec, 0, rows, dim))
+    s2 = np.asarray(robe_slots(spec, 0, rows, dim))
+    assert (s1 == s2).all()
+    assert s1.min() >= 0 and s1.max() < 4096
+
+
+def test_block_contiguity_circular():
+    """Elements of one block occupy consecutive slots mod |M| (Eq. 2)."""
+    spec = RobeSpec(size=257, block_size=16, seed=1)   # prime size → wraps
+    slots = np.asarray(robe_slots(spec, 0, jnp.arange(64), 8)).reshape(-1)
+    idx = np.arange(64 * 8)
+    for b in np.unique(idx // 16):
+        s = slots[idx // 16 == b]
+        assert ((np.diff(s.astype(np.int64)) % 257) == 1).all()
+
+
+def test_z1_equals_feature_hashing_scatter():
+    """ROBE-1 = feature hashing: every element placed independently."""
+    spec = RobeSpec(size=512, block_size=1, seed=4)
+    n = 300
+    theta = np.random.RandomState(0).randn(n)
+    mem = sketch_vector(theta, spec)
+    back = unsketch_vector(mem, n, spec)
+    slots = np.asarray(robe_slots(spec, 0, jnp.arange(n), 1))[:, 0]
+    # slots with a single occupant reconstruct exactly
+    uniq, counts = np.unique(slots, return_counts=True)
+    single = np.isin(slots, uniq[counts == 1])
+    assert np.allclose(back[single], theta[single])
+
+
+def test_lookup_matches_unsketch():
+    spec = RobeSpec(size=1000, block_size=8, seed=3, use_sign=True)
+    mem = np.asarray(init_memory(jax.random.PRNGKey(0), spec))
+    out = np.asarray(robe_lookup(jnp.array(mem), spec, 0, jnp.arange(50), 16))
+    want = unsketch_vector(mem, 800, spec).reshape(50, 16)
+    assert np.allclose(out, want)
+
+
+def test_tables_are_independent():
+    spec = RobeSpec(size=1 << 16, block_size=8, seed=5)
+    a = np.asarray(robe_slots(spec, 0, jnp.arange(100), 16))
+    b = np.asarray(robe_slots(spec, 1, jnp.arange(100), 16))
+    assert (a != b).mean() > 0.99
+
+
+def test_grad_is_scatter_add():
+    """Backward accumulates aliased gradients into shared slots (Fig. 2)."""
+    spec = RobeSpec(size=64, block_size=4, seed=0)     # tiny → collisions
+    mem = jnp.zeros(64)
+    rows = jnp.arange(40)
+    g = jax.grad(lambda m: robe_lookup(m, spec, 0, rows, 8).sum())(mem)
+    slots = np.asarray(robe_slots(spec, 0, rows, 8)).reshape(-1)
+    want = np.zeros(64)
+    np.add.at(want, slots, 1.0)
+    assert np.allclose(np.asarray(g), want)
+
+
+def test_bag_lookup_masks_padding():
+    spec = RobeSpec(size=512, block_size=8, seed=0)
+    mem = init_memory(jax.random.PRNGKey(1), spec)
+    rows = jnp.array([[[3, 7, -1], [2, -1, -1]]], jnp.int32)   # [1,2,3]
+    out = robe_lookup_bag(mem, spec, jnp.array([[0, 1]]), rows, 8)
+    e3 = robe_lookup(mem, spec, 0, jnp.array([3]), 8)[0]
+    e7 = robe_lookup(mem, spec, 0, jnp.array([7]), 8)[0]
+    e2 = robe_lookup(mem, spec, 1, jnp.array([2]), 8)[0]
+    assert np.allclose(np.asarray(out[0, 0]), np.asarray(e3 + e7), atol=1e-6)
+    assert np.allclose(np.asarray(out[0, 1]), np.asarray(e2), atol=1e-6)
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError):
+        RobeSpec(size=100, block_size=3)               # not a power of two
+    with pytest.raises(ValueError):
+        RobeSpec(size=8, block_size=16)                # block > memory

