@@ -1,0 +1,16 @@
+"""repro package bootstrap.
+
+Installs the jax compatibility shims (``repro.dist.compat``) at package
+import, so every module — and the test subprocesses, which import a repro
+module before touching ``jax.shard_map`` — sees one distributed API
+surface regardless of the pinned jax version.
+
+Importing jax here does NOT initialize the backend, so modules that must
+set XLA_FLAGS (launch/dryrun.py, tests/conftest.py) still work as long as
+they set the flag before the first device query.
+"""
+
+from repro.dist import compat as _compat
+
+_compat.install()
+del _compat

@@ -1,0 +1,1 @@
+"""Synthetic data generators: CTR streams, LM token streams, graphs."""

@@ -1,0 +1,18 @@
+"""Logical-axis sharding subsystem.
+
+``repro.dist.api`` holds the mesh context (``DistContext`` / ``use`` /
+``current``) and the logical-axis sharding helpers (``shard`` /
+``shard_if_divisible``); ``repro.dist.param_specs`` derives PartitionSpec
+pytrees for every parameter family (row-sharded full embedding tables,
+replicated ROBE arrays, Megatron-TP transformer weights, expert-parallel
+MoE stacks, mirrored optimizer state).
+"""
+
+from repro.dist.api import (DistContext, current, default_rules, shard,
+                            shard_if_divisible, use)
+from repro.dist.param_specs import (recsys_specs, replicated_specs,
+                                    state_specs, transformer_specs)
+
+__all__ = ["DistContext", "current", "default_rules", "shard",
+           "shard_if_divisible", "use", "recsys_specs", "replicated_specs",
+           "state_specs", "transformer_specs"]

@@ -1,0 +1,177 @@
+"""Mesh context + logical-axis sharding constraints.
+
+The models never name mesh axes directly: they annotate tensors with
+*logical* axes ("batch", "seq", "mlp", "vocab", …) and the active
+``DistContext`` maps those to physical mesh axes through its ``rules``
+table.  Outside a context every helper is a no-op, so the same model code
+runs unchanged on a single device and on the production 16×16 / 2×16×16
+meshes (the paper's serving story: the ROBE array is replicated, so the
+whole forward works under any mesh without an embedding exchange).
+
+Layout conventions encoded in ``default_rules``:
+
+* ``batch``       — data-parallel axes ("data", or ("pod","data") multi-pod)
+* ``flat_batch``  — batch over the WHOLE mesh (ROBE lookups are local, so
+                    recsys batches shard over data AND model)
+* ``seq``         — Megatron-SP: activations live sequence-sharded over
+                    "model" between blocks
+* ``embed``       — replicated (d_model stays whole; TP splits live inside
+                    the attention/FFN weights instead)
+* ``mlp`` / ``heads`` / ``kv_heads`` / ``vocab`` / ``expert`` — the
+  Megatron-TP column dimensions, all over "model"
+* ``seq_kv_model`` — KV-cache sequence dim over "model" (divides for every
+  head count, unlike heads at small KV replication factors)
+* ``candidates``  — retrieval candidate sets over "model"
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+AxisRule = Union[None, str, Tuple[str, ...]]
+
+
+def default_rules(multi_pod: bool = False) -> Dict[str, AxisRule]:
+    """Logical-axis → mesh-axis table for the production meshes."""
+    dp: AxisRule = ("pod", "data") if multi_pod else "data"
+    every = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return {
+        "batch": dp,
+        "flat_batch": every,
+        "seq": "model",
+        "embed": None,
+        "mlp": "model",
+        "heads": "model",
+        "kv_heads": "model",
+        "vocab": "model",
+        "expert": "model",
+        "candidates": "model",
+        "seq_kv_model": "model",
+        "table_rows": "model",
+    }
+
+
+@dataclasses.dataclass(frozen=True)
+class DistContext:
+    mesh: Any                                  # jax.sharding.Mesh
+    rules: Dict[str, AxisRule]
+    multi_pod: bool = False
+
+    @property
+    def dp_axes(self) -> Tuple[str, ...]:
+        """The data-parallel mesh axes: ("data",) or ("pod", "data").
+        Derived from the mesh itself so a stale ``multi_pod`` flag can
+        never name an axis the mesh doesn't have."""
+        return tuple(a for a in ("pod", "data") if a in self.mesh.axis_names)
+
+    @property
+    def dp_size(self) -> int:
+        n = 1
+        for a in self.dp_axes:
+            n *= self.mesh.shape[a]
+        return n
+
+    @property
+    def n_devices(self) -> int:
+        n = 1
+        for s in self.mesh.shape.values():
+            n *= s
+        return n
+
+
+class _Stack(threading.local):
+    def __init__(self):
+        self.ctxs = []
+
+
+_STACK = _Stack()
+
+
+def current() -> Optional[DistContext]:
+    """The innermost active context, or None (single-device semantics)."""
+    return _STACK.ctxs[-1] if _STACK.ctxs else None
+
+
+@contextlib.contextmanager
+def use(ctx: DistContext):
+    """Activate ``ctx`` for the current thread."""
+    _STACK.ctxs.append(ctx)
+    try:
+        yield ctx
+    finally:
+        _STACK.ctxs.pop()
+
+
+def resolve_spec(ctx: DistContext, logical_axes: Sequence[Optional[str]],
+                 shape: Optional[Tuple[int, ...]] = None) -> Optional[P]:
+    """Map per-dimension logical axes to a PartitionSpec under ``ctx``.
+
+    Each entry is a logical-axis name or None.  Rules may map a name to one
+    mesh axis, a tuple of mesh axes, or None (replicated).  A mesh axis is
+    consumed at most once (first dimension wins); with ``shape`` given, a
+    dimension keeps its sharding only if its size divides the mapped axes'
+    total.  Returns None when every dimension resolves replicated.
+    """
+    mesh_axes = set(ctx.mesh.axis_names)
+    used: set = set()
+    dims = []
+    for i, name in enumerate(logical_axes):
+        rule = ctx.rules.get(name) if isinstance(name, str) else None
+        if rule is None:
+            dims.append(None)
+            continue
+        axes = (rule,) if isinstance(rule, str) else tuple(rule)
+        axes = tuple(a for a in axes if a in mesh_axes and a not in used)
+        if not axes:
+            dims.append(None)
+            continue
+        if shape is not None:
+            n = 1
+            for a in axes:
+                n *= ctx.mesh.shape[a]
+            if n == 0 or shape[i] % n != 0:
+                dims.append(None)
+                continue
+        used.update(axes)
+        dims.append(axes[0] if len(axes) == 1 else axes)
+    if all(d is None for d in dims):
+        return None
+    return P(*dims)
+
+
+def _constrain(x, ctx: DistContext, spec: P):
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))
+
+
+def shard(x, *logical_axes: Optional[str]):
+    """Constrain ``x`` to the layout named by per-dim logical axes.
+
+    No-op outside a DistContext.  Callers own divisibility (use
+    ``shard_if_divisible`` when a dim may not divide the mesh).
+    """
+    ctx = current()
+    if ctx is None:
+        return x
+    spec = resolve_spec(ctx, logical_axes)
+    if spec is None:
+        return x
+    return _constrain(x, ctx, spec)
+
+
+def shard_if_divisible(x, logical_axes: Sequence[Optional[str]]):
+    """Like ``shard`` but silently drops any dim whose size does not divide
+    the mapped mesh axes — the safe form for activations whose shapes vary
+    across cells (odd head counts, short decode sequences, …)."""
+    ctx = current()
+    if ctx is None:
+        return x
+    spec = resolve_spec(ctx, logical_axes, shape=tuple(x.shape))
+    if spec is None:
+        return x
+    return _constrain(x, ctx, spec)

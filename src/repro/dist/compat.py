@@ -1,0 +1,90 @@
+"""jax 0.4.x compatibility for the modern distributed API surface.
+
+The codebase (and tests/test_distributed.py, the executable spec of the
+sharding layer) programs against:
+
+* ``jax.shard_map(..., check_vma=...)`` — on 0.4.x this lives at
+  ``jax.experimental.shard_map.shard_map`` under the older ``check_rep``
+  name;
+* ``jax.lax.axis_size`` — on 0.4.x the idiom is ``lax.psum(1, axis)``,
+  which constant-folds to the static axis size;
+* gradients through ``shard_map`` bodies with unused (zero-cotangent)
+  outputs — 0.4.x's psum2/pbroadcast transpose rules bind symbolic
+  ``Zero`` cotangents straight into the next primitive and crash with
+  "Zero(...) is not a valid JAX type"; the patched rules filter Zeros
+  through untouched (the transpose of a zero cotangent is zero).
+
+``install()`` is idempotent and a no-op on jax versions that already ship
+the modern surface.
+"""
+
+from __future__ import annotations
+
+import jax
+
+_INSTALLED = False
+
+
+def _needs_zero_patch() -> bool:
+    try:
+        major, minor = (int(v) for v in jax.__version__.split(".")[:2])
+    except ValueError:
+        return False
+    return (major, minor) < (0, 5)
+
+
+def _patch_zero_transpose() -> None:
+    """Make shard_map's psum2/pbroadcast transposes Zero-cotangent safe."""
+    try:
+        from jax._src.ad_util import Zero
+        from jax._src.interpreters import ad
+        from jax.experimental import shard_map as sm
+    except ImportError:         # layout moved — assume the bug is gone too
+        return
+    if getattr(sm, "_repro_zero_transpose_patched", False):
+        return
+
+    def filtered(bind_dual):
+        def rule(cts, *args, axes, axis_index_groups):
+            nonzero = [ct for ct in cts if type(ct) is not Zero]
+            if not nonzero:
+                return list(cts)
+            outs = iter(bind_dual(*nonzero, axes=axes,
+                                  axis_index_groups=axis_index_groups))
+            return [ct if type(ct) is Zero else next(outs) for ct in cts]
+        return rule
+
+    ad.deflinear2(sm.psum2_p, filtered(sm.pbroadcast_p.bind))
+    ad.deflinear2(sm.pbroadcast_p, filtered(sm.psum2_p.bind))
+    sm._repro_zero_transpose_patched = True
+
+
+def install() -> None:
+    global _INSTALLED
+    if _INSTALLED:
+        return
+    _INSTALLED = True
+
+    if not hasattr(jax, "shard_map"):
+        from jax.experimental.shard_map import shard_map as _shard_map
+
+        def shard_map(f, mesh=None, in_specs=None, out_specs=None,
+                      check_vma=None, check_rep=None, auto=frozenset()):
+            if check_rep is None:
+                check_rep = True if check_vma is None else check_vma
+            return _shard_map(f, mesh, in_specs, out_specs,
+                              check_rep=check_rep, auto=auto)
+
+        jax.shard_map = shard_map
+
+    if not hasattr(jax.lax, "axis_size"):
+        from jax.lax import psum as _psum
+
+        def axis_size(axis_name):
+            # psum of a Python literal constant-folds to the static size
+            return _psum(1, axis_name)
+
+        jax.lax.axis_size = axis_size
+
+    if _needs_zero_patch():
+        _patch_zero_transpose()

@@ -1,0 +1,169 @@
+"""PartitionSpec pytrees for every parameter family.
+
+These are consumed by ``launch/cells.py`` as ``jit(in_shardings=…)`` (after
+wrapping in NamedSharding) and by the shard_map bodies whose in_specs must
+agree with the parameters' resident layout.
+
+Layouts:
+
+* ``recsys_specs``     — the paper's comparison axis.  The full-table
+  baseline is **row-sharded** (over "model", or over the whole mesh with
+  ``table_2d=True`` — kills the data-axis table-grad all-reduce); the ROBE
+  array and every dense tower stay **replicated**, which is exactly the
+  compression story: a ~100 MB array per device and zero embedding-exchange
+  collectives on the ROBE path.
+* ``transformer_specs`` — Megatron-TP: qkv/gate/up column-parallel, o/down
+  row-parallel, vocab-sharded embedding + lm_head, expert-parallel MoE
+  stacks (shared experts replicated, matching ``moe_param_specs``).
+  ``fsdp=True`` additionally shards each large still-replicated leaf over
+  the data axes (the 1T-cell memory lever).
+* ``replicated_specs`` — P() everywhere (GNN cells: pure data parallel).
+* ``state_specs``      — mirrors a param spec tree onto optimizer state
+  (moments/master shard like their parameters; anything unrecognized is
+  replicated).
+
+All functions take shape pytrees (``jax.eval_shape`` results), never real
+arrays.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+# dense_init sublayers inside attention blocks, classified Megatron-style
+_COL_W = {"wq", "wk", "wv", "w_uq", "w_uk", "w_uv"}
+_ROW_W = {"wo"}
+
+
+def _keys(path) -> list:
+    return [str(getattr(p, "key", getattr(p, "idx", ""))) for p in path]
+
+
+def _axes_tuple(rule) -> tuple:
+    if rule is None:
+        return ()
+    return (rule,) if isinstance(rule, str) else tuple(rule)
+
+
+def _entry(axes: tuple):
+    return axes[0] if len(axes) == 1 else axes
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, P)
+
+
+def replicated_specs(pshapes) -> Any:
+    """P() for every leaf — pure data-parallel parameters."""
+    return jax.tree.map(lambda _: P(), pshapes)
+
+
+def recsys_specs(pshapes, rules: Dict, table_2d: bool = False) -> Any:
+    """Full embedding table row-sharded; ROBE array + dense towers
+    replicated.  ``table_2d``: rows over dp+model (the whole mesh)."""
+    dp = _axes_tuple(rules.get("batch"))
+    rows = _axes_tuple(rules.get("table_rows", "model"))
+    table_axes = dp + rows if table_2d else rows
+
+    def leaf_spec(path, leaf):
+        keys = _keys(path)
+        if "embedding" in keys and keys[-1] == "table" and leaf.ndim >= 1:
+            return P(_entry(table_axes), *([None] * (leaf.ndim - 1)))
+        return P()
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, pshapes)
+
+
+def _fsdp_extend(spec: P, leaf, dp: tuple, min_size: int = 1 << 20) -> P:
+    """Shard the largest still-replicated dim of a big leaf over data."""
+    if not dp or int(np.prod(leaf.shape)) < min_size:
+        return spec
+    dims = list(spec) + [None] * (leaf.ndim - len(spec))
+    free = [i for i, d in enumerate(dims) if d is None]
+    if not free:
+        return spec
+    i = max(free, key=lambda j: leaf.shape[j])
+    dims[i] = _entry(dp)
+    return P(*dims)
+
+
+def transformer_specs(pshapes, rules: Dict, fsdp: bool = False) -> Any:
+    """Megatron-TP specs for the LM parameter tree (scan-stacked layers
+    carry a leading L dim, unrolled ``dense_layers`` do not)."""
+    mlp = _entry(_axes_tuple(rules.get("mlp", "model")) or ("model",))
+    vocab = _entry(_axes_tuple(rules.get("vocab", "model")) or ("model",))
+    ex = _entry(_axes_tuple(rules.get("expert", "model")) or ("model",))
+    dp = _axes_tuple(rules.get("batch"))
+
+    def leaf_spec(path, leaf):
+        keys = _keys(path)
+        nd = leaf.ndim
+        stacked = "layers" in keys and "dense_layers" not in keys
+        off = 1 if stacked else 0
+        dims = [None] * nd
+        name = keys[-1] if keys else ""
+        parent = keys[-2] if len(keys) >= 2 else ""
+
+        if "embed" in keys:
+            if name == "table" and nd >= 1:
+                dims[0] = vocab                       # vocab-row sharded
+        elif name == "lm_head" and nd >= 1:
+            dims[nd - 1] = vocab
+        elif "moe" in keys and "shared" not in keys:
+            if name in ("w_gate", "w_up", "w_down") and off < nd:
+                dims[off] = ex                        # [.., E, d, f]
+        elif "ffn" in keys:
+            if name in ("w_gate", "w_up") and nd >= 1:
+                dims[nd - 1] = mlp                    # column-parallel
+            elif name == "w_down" and off < nd:
+                dims[off] = mlp                       # row-parallel
+        elif "attn" in keys:
+            if name == "w" and parent in _COL_W and nd >= 1:
+                dims[nd - 1] = mlp
+            elif name == "w" and parent in _ROW_W and off < nd:
+                dims[off] = mlp
+            elif name == "b" and parent in _COL_W and nd >= 1:
+                dims[nd - 1] = mlp
+        spec = P(*dims)
+        if fsdp:
+            spec = _fsdp_extend(spec, leaf, dp)
+        return spec
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, pshapes)
+
+
+def state_specs(pspecs, opt_state) -> Any:
+    """Mirror ``pspecs`` onto an optimizer-state pytree.
+
+    Moments / master weights have the params' structure and shapes, so they
+    inherit the params' specs one-to-one; state families with a different
+    per-leaf structure (e.g. Adafactor's factored {vr, vc}) fall back to
+    replicated.
+    """
+    pdef = jax.tree_util.tree_structure(pspecs, is_leaf=_is_spec)
+    flat_specs = jax.tree_util.tree_leaves(pspecs, is_leaf=_is_spec)
+
+    def mirror(sub):
+        try:
+            sub_leaves = pdef.flatten_up_to(sub)
+        except (ValueError, TypeError):
+            return None
+        out = []
+        for s, leaf in zip(flat_specs, sub_leaves):
+            if not hasattr(leaf, "ndim"):
+                return None                  # nested deeper than params
+            out.append(s if len(s) <= leaf.ndim else P())
+        return pdef.unflatten(out)
+
+    def fallback(sub):
+        return jax.tree.map(lambda _: P(), sub)
+
+    if isinstance(opt_state, dict):
+        return {k: (m if (m := mirror(sub)) is not None else fallback(sub))
+                for k, sub in opt_state.items()}
+    m = mirror(opt_state)
+    return m if m is not None else fallback(opt_state)

@@ -54,15 +54,19 @@ def _lookup_fwd(memory, rows, table_ids, dim, spec, use_kernel):
 
 def _lookup_bwd(table_ids, dim, spec, use_kernel, res, g):
     rows, m = res
+    # the cotangent's dtype IS the memory dtype: custom_vjp cotangents match
+    # the primal output aval, and both lookup paths emit memory.dtype
+    mem_dtype = g.dtype
     tids = jnp.asarray(table_ids, jnp.uint32)[None, :]
     slots = robe_slots(spec, tids, rows, dim)            # [B, F, dim]
     g = g.astype(jnp.float32)
     if spec.use_sign:
         g = g * robe_signs(spec, tids, rows, dim)
-    # scatter-add of every element's grad into its shared slot (paper Fig. 2)
+    # scatter-add of every element's grad into its shared slot (paper Fig. 2);
+    # accumulate in f32, deliver in the memory's dtype (custom_vjp contract)
     gmem = jnp.zeros((m,), jnp.float32).at[slots.reshape(-1).astype(jnp.int32)
                                            ].add(g.reshape(-1))
-    return gmem, None
+    return gmem.astype(mem_dtype), None
 
 
 robe_lookup.defvjp(_lookup_fwd, _lookup_bwd)

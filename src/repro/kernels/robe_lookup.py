@@ -132,13 +132,14 @@ def _general_kernel(spec: RobeSpec, dim: int,
 
 
 def _pick_batch_tile(batch: int, f: int, dim: int) -> int:
-    """Batch tile so the output tile stays ≲ 2 MB of VMEM."""
+    """Batch tile so the output tile stays ≲ 2 MB of VMEM.
+
+    The tile need NOT divide the batch: callers pad the batch up to the
+    next tile multiple and slice the output back.  (The old divisor search
+    degraded to tb=1 for prime batch sizes — one grid step per row.)"""
     budget = 2 * 1024 * 1024 // 4
     tb = max(1, budget // max(1, f * dim))
-    tb = min(tb, batch, 1024)
-    while batch % tb:
-        tb -= 1
-    return tb
+    return min(tb, batch, 1024)
 
 
 @functools.partial(jax.jit, static_argnames=("spec", "dim", "table_ids",
@@ -154,7 +155,12 @@ def robe_lookup_pallas(memory: jnp.ndarray, rows: jnp.ndarray,
     b, f = rows.shape
     aligned = (spec.block_size % dim == 0)
     tb = _pick_batch_tile(b, f, dim)
-    grid = (b // tb,)
+    b_pad = ((b + tb - 1) // tb) * tb
+    if b_pad != b:
+        # pad with row 0 (any valid id) and slice the output back below
+        rows = jnp.concatenate(
+            [rows, jnp.zeros((b_pad - b, f), rows.dtype)])
+    grid = (b_pad // tb,)
 
     if aligned:
         pad = spec.block_size + dim
@@ -174,7 +180,7 @@ def robe_lookup_pallas(memory: jnp.ndarray, rows: jnp.ndarray,
             pl.BlockSpec((mem_in.shape[0],), lambda i: (0,)),   # M in VMEM
         ],
         out_specs=pl.BlockSpec((tb, f, dim), lambda i: (i, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((b, f, dim), memory.dtype),
+        out_shape=jax.ShapeDtypeStruct((b_pad, f, dim), memory.dtype),
         interpret=interpret,
     )(rows, tids, mem_in)
-    return out
+    return out[:b] if b_pad != b else out

@@ -1,0 +1,2 @@
+"""Production-mesh launch tooling: mesh/context builders, cell registry,
+multi-pod dry-run, roofline reports."""

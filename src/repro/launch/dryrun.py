@@ -62,6 +62,15 @@ def _shape_bytes(shape_str: str) -> int:
     return total
 
 
+def cost_dict(compiled) -> dict:
+    """compiled.cost_analysis() as one dict (jax<0.5 returns a per-module
+    list; newer jax returns the dict directly)."""
+    cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
+
+
 def parse_collectives(hlo_text: str) -> dict:
     """Sum per-device output bytes of every collective in the compiled HLO."""
     out = {}
@@ -113,7 +122,7 @@ def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
                 t1 = time.time()
                 compiled = lowered.compile()
                 mem = compiled.memory_analysis()
-                cost = compiled.cost_analysis() or {}
+                cost = cost_dict(compiled)
                 hlo = compiled.as_text()
                 colls = parse_collectives(hlo)
                 rec.update(

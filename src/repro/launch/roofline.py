@@ -83,7 +83,7 @@ def run_probe(arch_id: str, shape_name: str, n_layers: int,
             lowered = jax.jit(cell.fn, in_shardings=cell.in_shardings
                               ).lower(*cell.arg_shapes)
             compiled = lowered.compile()
-            cost = compiled.cost_analysis() or {}
+            cost = dryrun.cost_dict(compiled)
             colls = dryrun.parse_collectives(compiled.as_text())
             rec.update(ok=True, flops=cost.get("flops"),
                        bytes_accessed=cost.get("bytes accessed"),

@@ -1,0 +1,1 @@
+"""Model families: recsys (DLRM & co.), decoder-only LMs, GatedGCN."""

@@ -1,0 +1,2 @@
+"""Functional NN substrate: core layers, embeddings, attention, MoE,
+interaction ops."""

@@ -1,0 +1,1 @@
+"""Serving utilities: micro-batching scorer front-end."""

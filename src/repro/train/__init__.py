@@ -1,0 +1,2 @@
+"""Training substrate: optimizers, train loop, checkpointing, metrics,
+gradient compression."""

@@ -1,0 +1,44 @@
+"""Import-sweep smoke test.
+
+Every module under src/repro must import.  A missing submodule (the seed
+shipped 19 import sites against a repro.dist that did not exist) then
+fails loudly as ONE assertion naming the broken modules, instead of
+killing collection of every test module that transitively imports it.
+"""
+
+import importlib
+import os
+import pkgutil
+
+import repro
+
+SRC_ROOT = os.path.dirname(os.path.abspath(repro.__file__))
+
+
+def _walk_modules():
+    names = ["repro"]
+    for mod in pkgutil.walk_packages([SRC_ROOT], prefix="repro."):
+        names.append(mod.name)
+    return sorted(names)
+
+
+def test_every_repro_module_imports():
+    failures = {}
+    for name in _walk_modules():
+        try:
+            importlib.import_module(name)
+        except BaseException as e:          # noqa: BLE001 — report them all
+            failures[name] = f"{type(e).__name__}: {e}"
+    assert not failures, (
+        "modules failed to import:\n"
+        + "\n".join(f"  {k}: {v}" for k, v in sorted(failures.items())))
+
+
+def test_sweep_covers_known_subsystems():
+    """The walker actually sees the package layout (guards against a silent
+    empty sweep if the package moves)."""
+    names = set(_walk_modules())
+    for expect in ("repro.dist.api", "repro.dist.param_specs",
+                   "repro.kernels.ops", "repro.models.recsys",
+                   "repro.launch.cells", "repro.train.train_loop"):
+        assert expect in names, expect

@@ -52,6 +52,62 @@ def test_robe_lookup_kernel_grad_matches_ref_grad():
                                rtol=1e-5, atol=1e-6)
 
 
+def test_robe_lookup_grad_dtype_matches_memory_dtype():
+    """Custom-VJP contract: the memory cotangent carries the memory's dtype
+    (bf16 ROBE arrays previously got a silently-f32 gradient)."""
+    rs = np.random.RandomState(4)
+    spec = RobeSpec(size=512, block_size=16, seed=3, use_sign=True)
+    rows = jnp.asarray(rs.randint(0, 1000, (4, 3)), jnp.int32)
+    ct = jnp.asarray(rs.randn(4, 3, 16), jnp.float32)
+    for dtype in (jnp.float32, jnp.bfloat16):
+        mem = jnp.asarray(rs.randn(512), dtype)
+        g = jax.grad(lambda m: (robe_lookup(m, rows, (0, 1, 2), 16, spec,
+                                            False).astype(jnp.float32)
+                                * ct).sum())(mem)
+        assert g.dtype == dtype, (g.dtype, dtype)
+    # bf16 grad values match the f32 reference within bf16 resolution
+    mem32 = jnp.asarray(rs.randn(512), jnp.float32)
+    want = jax.grad(lambda m: (robe_lookup(m, rows, (0, 1, 2), 16, spec,
+                                           False) * ct).sum())(mem32)
+    got = jax.grad(lambda m: (robe_lookup(m, rows, (0, 1, 2), 16, spec,
+                                          False).astype(jnp.float32)
+                              * ct).sum())(mem32.astype(jnp.bfloat16))
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want), rtol=0.05, atol=0.05)
+
+
+@pytest.mark.parametrize("b,z", [
+    (13, 16),       # general kernel (Z < d), tile 8 < batch → pads to 16
+    (13, 128),      # aligned kernel (Z % d == 0), same pad-and-slice path
+    (1, 16),        # degenerate batch
+])
+def test_robe_lookup_kernel_prime_batch_pads_tile(b, z):
+    """Prime batch sizes must not degrade the grid to one-row tiles: the
+    batch is padded to the tile and the output sliced back.  f·d is sized
+    so the VMEM budget makes tb < b and the pad branch actually runs."""
+    from repro.kernels.robe_lookup import _pick_batch_tile
+    f, d = 512, 128
+    assert _pick_batch_tile(13, f, d) == 8        # tile < batch: pads
+    rs = np.random.RandomState(5)
+    spec = RobeSpec(size=4096, block_size=z, seed=7, use_sign=True)
+    mem = jnp.asarray(rs.randn(4096), jnp.float32)
+    rows = jnp.asarray(rs.randint(0, 10**6, (b, f)), jnp.int32)
+    want = ref.robe_lookup_ref(mem, rows, jnp.arange(f, dtype=jnp.uint32),
+                               d, spec)
+    got = robe_lookup(mem, rows, tuple(range(f)), d, spec, True)
+    assert got.shape == (b, f, d)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+def test_pick_batch_tile_no_prime_degradation():
+    from repro.kernels.robe_lookup import _pick_batch_tile
+    # prime batch: tile stays large (pad-and-slice), never collapses to 1
+    assert _pick_batch_tile(8191, 26, 64) > 1
+    assert _pick_batch_tile(8192, 26, 64) == _pick_batch_tile(8191, 26, 64)
+    # tiny batches are still clamped to the batch
+    assert _pick_batch_tile(3, 4, 16) == 3
+
+
 def test_robe_lookup_wraps_circularly():
     """Rows whose blocks land near |M| must wrap, matching the oracle."""
     spec = RobeSpec(size=260, block_size=64, seed=0)   # wraps often
