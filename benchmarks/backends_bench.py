@@ -1,0 +1,77 @@
+"""Per-backend embedding microbenchmark -> ``BENCH_backends.json``.
+
+One row per registered ``EmbeddingBackend`` at smoke scale: trained
+parameter count, the backend's own cost model (bytes fetched / flops per
+batch), and measured CPU lookup throughput.  The JSON lands at the repo
+root so the perf trajectory of the substrate sweep is recorded per commit.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.robe import RobeSpec
+from repro.nn.embeddings import (EmbeddingSpec, backend_names,
+                                 embedding_init, embedding_lookup,
+                                 get_backend)
+
+BENCH_VOCABS = (50_000, 20_000, 80_000, 5_000, 30_000, 1_000, 15_000, 400)
+DIM = 16
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_backends.json")
+
+
+def _spec(kind: str) -> EmbeddingSpec:
+    n_logical = sum(BENCH_VOCABS) * DIM
+    return EmbeddingSpec(
+        vocab_sizes=BENCH_VOCABS, dim=DIM, kind=kind,
+        robe=RobeSpec(size=max(512, n_logical // 1000), block_size=32,
+                      seed=11))
+
+
+def run(batch: int = 8192, iters: int = 16):
+    rows = []
+    rs = np.random.RandomState(0)
+    idx_np = rs.randint(0, min(BENCH_VOCABS),
+                        (batch, len(BENCH_VOCABS))).astype(np.int32)
+    for kind in backend_names():
+        spec = _spec(kind)
+        params = embedding_init(jax.random.PRNGKey(0), spec)
+        idx = jnp.asarray(idx_np)
+        fn = jax.jit(lambda p, i, s=spec: embedding_lookup(p, s, i))
+        fn(params, idx).block_until_ready()            # compile
+        t0 = time.monotonic()
+        for _ in range(iters):
+            fn(params, idx).block_until_ready()
+        dt = (time.monotonic() - t0) / iters
+        cost = get_backend(kind).cost(spec, batch)
+        rows.append({
+            "name": f"backends/{kind}",
+            "params": int(spec.param_count),
+            "compression": round(float(spec.compression), 1),
+            "lookups_per_s": int(batch * spec.n_fields / dt),
+            "us_per_batch": round(dt * 1e6),
+            "cost_bytes_fetched": int(cost["bytes_fetched"]),
+            "cost_flops": int(cost["flops"]),
+        })
+    return rows
+
+
+def write_json(rows, path: str = OUT_PATH) -> str:
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=1)
+        f.write("\n")
+    return os.path.abspath(path)
+
+
+if __name__ == "__main__":
+    rows = run()
+    for r in rows:
+        print(r)
+    print("wrote", write_json(rows))

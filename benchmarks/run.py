@@ -15,9 +15,27 @@ def _emit(name, us, derived):
     print(f"{name},{us},{json.dumps(derived, sort_keys=True)}")
 
 
+def _backends(fast: bool) -> None:
+    """Per-backend lookup throughput + params -> BENCH_backends.json."""
+    from benchmarks import backends_bench as bb
+    t0 = time.monotonic()
+    rows = bb.run(batch=2048 if fast else 8192, iters=4 if fast else 16)
+    bb.write_json(rows)
+    for r in rows:
+        r = dict(r)
+        _emit(r.pop("name"), r.pop("us_per_batch"), r)
+    _emit("backends/wall_s", round((time.monotonic() - t0) * 1e6), {})
+
+
 def main() -> None:
     fast = "--fast" in sys.argv
     print("name,us_per_call,derived")
+
+    if "--backends-only" in sys.argv:
+        _backends(fast)
+        return
+
+    _backends(fast)
 
     from benchmarks import table1_memory_fetches as t1
     t0 = time.monotonic()

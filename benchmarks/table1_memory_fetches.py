@@ -13,14 +13,9 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core.robe import RobeSpec, robe_slots
-
-
-def analytic_max_fetches(d: int, z: int, bus: int) -> float:
-    if z >= d:
-        return d / bus + 2
-    if z >= bus:
-        return d / bus + d / z
-    return 2 * d / z
+# the analytic bound is the robe backend's memory-traffic model — read it
+# from the substrate rather than reimplementing it here
+from repro.nn.embedding_backends import analytic_max_fetches
 
 
 def measured_fetches(d: int, z: int, bus: int, m: int = 1 << 20,

@@ -2,7 +2,9 @@
 
 Runs on a single CPU in ~a minute.  Shows the paper's core loop:
   * 1000× fewer embedding parameters (one shared hashed array),
-  * same training API as the full model (swap ``embedding="full"``),
+  * same training API as the full model (swap ``embedding="full"``, or any
+    registered backend — "hashed", "tt"; see
+    examples/embedding_backend_sweep.py for the four-substrate sweep),
   * quality tracked with AUC on a held-out slice.
 
     PYTHONPATH=src python examples/quickstart.py

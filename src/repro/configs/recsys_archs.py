@@ -50,12 +50,14 @@ def _bundle(arch_id, full_kw, smoke_kw, shapes=RECSYS_SHAPES, notes=""):
         kw = dict(full_kw if variant == "full" else smoke_kw)
         kw.update(over)
         kw.setdefault("name", f"{arch_id}-{variant}")
+        # any registered EmbeddingBackend name sweeps through the same
+        # cells; substrate sizing defaults are set unconditionally (unused
+        # knobs are inert) so no backend is special-cased here
         kw["embedding"] = embedding
-        if embedding == "robe":
-            kw.setdefault("robe_size",
-                          _robe_slots(kw["vocab_sizes"], kw["embed_dim"],
-                                      robe_compression))
-            kw.setdefault("robe_block", 32)
+        kw.setdefault("robe_size",
+                      _robe_slots(kw["vocab_sizes"], kw["embed_dim"],
+                                  robe_compression))
+        kw.setdefault("robe_block", 32)
         return RecsysConfig(**kw)
 
     return register(ArchBundle(arch_id=arch_id, kind="recsys", shapes=shapes,

@@ -15,6 +15,10 @@ block-id computation be a limb-wise shift instead of a 64-bit division.
 The jnp path below is the reference implementation used everywhere off the
 hot path; ``repro.kernels.ops.robe_lookup`` is the Pallas TPU kernel with the
 same semantics (block-coalesced VMEM reads), validated against this module.
+Models never call this module directly: the consumer-facing surface is the
+``robe`` ``EmbeddingBackend`` (``repro.nn.embedding_backends.robe``), which
+owns placement, PartitionSpecs, and the roofline cost model on top of the
+hash math here.
 
 Backward pass: JAX autodiff through the gather produces exactly the paper's
 Fig. 2 scatter-add — gradients of all aliased parameters accumulate into the
@@ -159,8 +163,10 @@ def robe_lookup_bag(memory: jnp.ndarray, spec: RobeSpec, table_ids,
     emb = emb * w[..., None]
     out = emb.sum(axis=-2)
     if combiner == "mean":
-        denom = jnp.maximum(w.sum(axis=-1, keepdims=True), 1.0)
-        out = out / denom
+        # true weighted mean: fractional weight mass < 1 must not be
+        # clamped away; empty bags (mass 0) pool to zero
+        mass = w.sum(axis=-1, keepdims=True)
+        out = jnp.where(mass > 0, out / jnp.where(mass > 0, mass, 1.0), 0.0)
     elif combiner != "sum":
         raise ValueError(f"unknown combiner {combiner}")
     return out

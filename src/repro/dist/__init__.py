@@ -3,9 +3,9 @@
 ``repro.dist.api`` holds the mesh context (``DistContext`` / ``use`` /
 ``current``) and the logical-axis sharding helpers (``shard`` /
 ``shard_if_divisible``); ``repro.dist.param_specs`` derives PartitionSpec
-pytrees for every parameter family (row-sharded full embedding tables,
-replicated ROBE arrays, Megatron-TP transformer weights, expert-parallel
-MoE stacks, mirrored optimizer state).
+pytrees for every parameter family (embedding subtrees delegated to their
+``EmbeddingBackend``'s own ``param_specs``, Megatron-TP transformer
+weights, expert-parallel MoE stacks, mirrored optimizer state).
 """
 
 from repro.dist.api import (DistContext, current, default_rules, shard,

@@ -6,12 +6,13 @@ agree with the parameters' resident layout.
 
 Layouts:
 
-* ``recsys_specs``     — the paper's comparison axis.  The full-table
-  baseline is **row-sharded** (over "model", or over the whole mesh with
-  ``table_2d=True`` — kills the data-axis table-grad all-reduce); the ROBE
-  array and every dense tower stay **replicated**, which is exactly the
-  compression story: a ~100 MB array per device and zero embedding-exchange
-  collectives on the ROBE path.
+* ``recsys_specs``     — dense towers replicated; the embedding subtree
+  comes from its backend's ``param_specs`` (``repro.nn.embedding_backends``):
+  the full table row-sharded over "model" (or the whole mesh with
+  ``placement="2d"`` — kills the data-axis table-grad all-reduce), the ROBE
+  array replicated (or model-sharded ZeRO-3 style), hashed/tt replicated.
+  This module no longer special-cases "robe vs table" — substrates own
+  their layout.
 * ``transformer_specs`` — Megatron-TP: qkv/gate/up column-parallel, o/down
   row-parallel, vocab-sharded embedding + lm_head, expert-parallel MoE
   stacks (shared experts replicated, matching ``moe_param_specs``).
@@ -62,20 +63,31 @@ def replicated_specs(pshapes) -> Any:
     return jax.tree.map(lambda _: P(), pshapes)
 
 
-def recsys_specs(pshapes, rules: Dict, table_2d: bool = False) -> Any:
-    """Full embedding table row-sharded; ROBE array + dense towers
-    replicated.  ``table_2d``: rows over dp+model (the whole mesh)."""
-    dp = _axes_tuple(rules.get("batch"))
-    rows = _axes_tuple(rules.get("table_rows", "model"))
-    table_axes = dp + rows if table_2d else rows
+def recsys_specs(pshapes, rules: Dict, embedding_spec=None, *,
+                 table_2d: bool = False) -> Any:
+    """Dense towers replicated; the ``embedding`` subtree delegated to
+    ``get_backend(embedding_spec.kind).param_specs`` (each substrate owns
+    its layout).  ``table_2d`` forces the full table's whole-mesh placement
+    for callers that don't thread it through the spec."""
+    import dataclasses as _dc
 
-    def leaf_spec(path, leaf):
-        keys = _keys(path)
-        if "embedding" in keys and keys[-1] == "table" and leaf.ndim >= 1:
-            return P(_entry(table_axes), *([None] * (leaf.ndim - 1)))
-        return P()
+    from repro.nn.embedding_backends import get_backend
 
-    return jax.tree_util.tree_map_with_path(leaf_spec, pshapes)
+    out = jax.tree.map(lambda _: P(), pshapes)
+    if isinstance(out, dict) and "embedding" in out:
+        if embedding_spec is None or not hasattr(embedding_spec, "kind"):
+            # never silently replicate a (possibly 100GB) table: the
+            # substrate's layout must come from its spec
+            raise ValueError(
+                "recsys_specs requires embedding_spec= (an EmbeddingSpec) "
+                "for parameter trees with an 'embedding' subtree — its "
+                "backend owns the layout")
+        spec = embedding_spec
+        if table_2d and spec.placement != "2d":
+            spec = _dc.replace(spec, placement="2d")
+        out = dict(out)
+        out["embedding"] = get_backend(spec.kind).param_specs(spec, rules)
+    return out
 
 
 def _fsdp_extend(spec: P, leaf, dp: tuple, min_size: int = 1 << 20) -> P:

@@ -1,6 +1,8 @@
 # Pallas TPU kernels for the ROBE hot paths: fused hash+block-gather
 # embedding lookup (the paper's memory-bound inference path) and the DLRM
-# pairwise-dot interaction. ops.py = jit'd wrappers; ref.py = jnp oracles.
-from repro.kernels.ops import robe_lookup, dot_interaction
+# pairwise-dot interaction, plus the jnp lookup ops of the hashed/tt
+# substrates. ops.py = jit'd wrappers; ref.py = jnp oracles.
+from repro.kernels.ops import (robe_lookup, dot_interaction, qr_lookup,
+                               tt_lookup)
 
-__all__ = ["robe_lookup", "dot_interaction"]
+__all__ = ["robe_lookup", "dot_interaction", "qr_lookup", "tt_lookup"]

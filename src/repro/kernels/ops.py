@@ -79,3 +79,34 @@ def dot_interaction(feats: jnp.ndarray, self_interaction: bool = False,
         return dot_interaction_pallas(feats, self_interaction,
                                       interpret=not _on_tpu())
     return _ref.dot_interaction_ref(feats, self_interaction)
+
+
+# ---------------------------------------------------------------------------
+# compressed-substrate lookups (hashed / tensor-train backends).  jnp-only
+# today: both are gather + tiny elementwise/einsum work that XLA already
+# fuses well; a Pallas fusion is a future-kernel item, so the op boundary
+# lives here where the robe kernel's does.
+# ---------------------------------------------------------------------------
+
+def qr_lookup(q_table: jnp.ndarray, r_table: jnp.ndarray,
+              q_idx: jnp.ndarray, r_idx: jnp.ndarray) -> jnp.ndarray:
+    """QR compositional lookup: Q[q_idx] * R[r_idx] -> [..., dim]."""
+    return jnp.take(q_table, q_idx, axis=0) * jnp.take(r_table, r_idx,
+                                                       axis=0)
+
+
+def tt_lookup(core0: jnp.ndarray, core1: jnp.ndarray, core2: jnp.ndarray,
+              i1: jnp.ndarray, i2: jnp.ndarray, i3: jnp.ndarray,
+              dim: int) -> jnp.ndarray:
+    """Tensor-train row contraction.
+
+    core0 [n1, d1, r], core1 [n2, r, d2, r], core2 [n3, r, d3]; the row
+    (i1, i2, i3) contracts to its [d1·d2·d3] = dim embedding without ever
+    materializing the table.
+    """
+    c1 = jnp.take(core0, i1, axis=0)                # [..., d1, r]
+    c2 = jnp.take(core1, i2, axis=0)                # [..., r, d2, r]
+    c3 = jnp.take(core2, i3, axis=0)                # [..., r, d3]
+    t = jnp.einsum("...ap,...pbq->...abq", c1, c2)  # [..., d1, d2, r]
+    e = jnp.einsum("...abq,...qc->...abc", t, c3)   # [..., d1, d2, d3]
+    return e.reshape(e.shape[:-3] + (dim,))

@@ -40,3 +40,33 @@ def cin_layer_ref(x0: jnp.ndarray, xk: jnp.ndarray, w: jnp.ndarray
     z[b,i,j,d] = x0[b,i,d] * xk[b,j,d]; out[b,h,d] = Σ_ij w[h,i,j] z[b,i,j,d].
     """
     return jnp.einsum("bid,bjd,hij->bhd", x0, xk, w)
+
+
+def qr_materialize_ref(q_table: jnp.ndarray, r_table: jnp.ndarray,
+                       vocab_sizes, m: int) -> jnp.ndarray:
+    """Materialize the full [total_rows, dim] table a QR (quotient ×
+    remainder) substrate represents — the oracle the ``hashed`` backend's
+    per-row path is checked against (autodiff-able)."""
+    out = []
+    q_off = 0
+    for f, v in enumerate(vocab_sizes):
+        x = jnp.arange(int(v))
+        q = jnp.take(q_table, q_off + x // m, axis=0)
+        r = jnp.take(r_table, f * m + x % m, axis=0)
+        out.append(q * r)
+        q_off += -(-int(v) // m)
+    return jnp.concatenate(out, axis=0)
+
+
+def tt_materialize_ref(core0: jnp.ndarray, core1: jnp.ndarray,
+                       core2: jnp.ndarray) -> jnp.ndarray:
+    """Materialize the full [n1·n2·n3, d1·d2·d3] table a tensor-train
+    substrate represents, via one whole-tensor einsum (autodiff-able) —
+    the oracle for the ``tt`` backend's per-row chain contraction.  Row
+    g ↔ (i1, i2, i3) with i3 fastest, matching the backend's mixed-radix
+    decomposition."""
+    n1, d1, r1 = core0.shape
+    n2, _, d2, r2 = core1.shape
+    n3, _, d3 = core2.shape
+    t = jnp.einsum("iap,jpbq,kqc->ijkabc", core0, core1, core2)
+    return t.reshape(n1 * n2 * n3, d1 * d2 * d3)

@@ -27,6 +27,7 @@ from repro.configs import get_arch
 from repro.dist import api as dist
 from repro.dist.param_specs import (recsys_specs, replicated_specs,
                                     state_specs, transformer_specs)
+from repro.nn.embedding_backends import get_backend
 from repro.train.optimizer import OptimizerConfig, make_optimizer
 
 SDS = jax.ShapeDtypeStruct
@@ -200,15 +201,17 @@ def build_recsys_cell(arch_id: str, shape_name: str, ctx,
                              full_table_shard="2d" if table_2d else "model",
                              compute_dtype=jnp.bfloat16)
     embedding = emb_kind
+    emb_spec = cfg.embedding_spec()
+    backend = get_backend(emb_spec.kind)
     dp = _dp(ctx)
     dp_t = (dp,) if isinstance(dp, str) else tuple(dp)
-    # robe lookups are local → batch shards over the WHOLE mesh; the
-    # full-table baseline exchanges over model → batch shards over dp only
-    flat_axes = dp_t + ("model",) if embedding == "robe" else dp
+    # local-lookup substrates (robe/hashed/tt) → batch shards over the
+    # WHOLE mesh; the full-table baseline exchanges over model → dp only
+    flat_axes = dp_t + ("model",) if backend.local_batch else dp
 
     pshapes = jax.eval_shape(functools.partial(R.init_params, cfg=cfg),
                              jax.random.PRNGKey(0))
-    pspecs = recsys_specs(pshapes, ctx.rules, table_2d=table_2d)
+    pspecs = recsys_specs(pshapes, ctx.rules, embedding_spec=emb_spec)
 
     # model flops ≈ 2·(dense params)·batch + interaction; embedding is
     # memory-bound: report the dense-compute figure
@@ -269,7 +272,7 @@ def build_recsys_cell(arch_id: str, shape_name: str, ctx,
         bshape, bspec = _recsys_batch(cfg, n_cand, ctx, flat_axes)
         bshape.pop("label"), bspec.pop("label")
         # 1e6 % 256 != 0 → shard the bulk-scoring batch over model only
-        if embedding == "robe":
+        if backend.local_batch:
             bspec = {k: P("model", *([None] * (len(v.shape) - 1)))
                      for k, v in bshape.items()}
         fn = lambda params, batch: R.forward(params, cfg, batch)

@@ -155,7 +155,7 @@ def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
 
 
 def default_cells():
-    """The 40 assigned cells (+ recsys full-table baseline variants)."""
+    """The 40 assigned cells (+ recsys embedding-substrate variants)."""
     from repro.configs import all_arch_ids, get_arch
     cells = []
     for arch in all_arch_ids():
@@ -163,7 +163,10 @@ def default_cells():
         for shape in bundle.shapes:
             cells.append((arch, shape, "default"))
             if bundle.kind == "recsys":
-                cells.append((arch, shape, "full"))   # the paper's baseline
+                # the paper's full-table baseline + the community
+                # compression baselines, through the same cells
+                for emb in ("full", "hashed", "tt"):
+                    cells.append((arch, shape, emb))
     return cells
 
 

@@ -110,6 +110,19 @@ def corrected_terms(arch_id: str, shape_name: str,
     byts = full.get("bytes_accessed") or 0.0
     wire = full.get("collective_wire_bytes") or 0.0
 
+    emb_cost = None
+    if bundle.kind == "recsys":
+        # the substrate's own cost model (params / HBM bytes / flops per
+        # step) — read from the backend, not recomputed here
+        from repro.nn.embedding_backends import get_backend
+        emb_name = {"default": "robe", "full2d": "full"}.get(embedding,
+                                                             embedding)
+        spec = bundle.make_config("full",
+                                  embedding=emb_name).embedding_spec()
+        shp = bundle.shapes[shape_name]
+        b = shp.get("batch") or shp.get("n_candidates") or 0
+        emb_cost = get_backend(spec.kind).cost(spec, b)
+
     corr = None
     if bundle.kind == "lm":
         cfg = bundle.make_config("full")
@@ -151,6 +164,7 @@ def corrected_terms(arch_id: str, shape_name: str,
         "mem_args_gb": full["memory"]["argument_bytes"] / 1e9,
         "mem_temp_gb": full["memory"]["temp_bytes"] / 1e9,
         "scan_corrected": corr is not None,
+        "embedding_cost": emb_cost,
         "note": full.get("note", ""),
     }
 
@@ -177,8 +191,8 @@ def main():
     for arch in all_arch_ids():
         bundle = get_arch(arch)
         for shape in bundle.shapes:
-            embs = ["default"] + (["full"] if bundle.kind == "recsys"
-                                  else [])
+            embs = ["default"] + (["full", "hashed", "tt"]
+                                  if bundle.kind == "recsys" else [])
             for e in embs:
                 r = corrected_terms(arch, shape, e)
                 if r is None:

@@ -1,7 +1,8 @@
 """RecSys family: DLRM, AutoInt, xDeepFM, DeepFM, DCN, FiBiNET, Two-Tower.
 
-All share the embedding front-end (``EmbeddingSpec``: full-table baseline or
-ROBE array — the paper's comparison axis) and differ in the interaction op.
+All share the embedding front-end (``EmbeddingSpec`` + a registered
+``EmbeddingBackend``: full / robe / hashed / tt — the paper's comparison
+axis as a pluggable substrate) and differ in the interaction op.
 Batch layout: dense features [B, n_dense] float, sparse ids [B, F] int32.
 
 Outputs are logits [B] (CTR models) or (user_vec, item_vec) (two-tower).
@@ -19,7 +20,7 @@ from repro.core.robe import RobeSpec
 from repro.dist import api as dist
 from repro.nn.core import dense_apply, dense_init, mlp_apply, mlp_init
 from repro.nn.embeddings import EmbeddingSpec, embedding_init, \
-    embedding_lookup
+    embedding_lookup, embedding_lookup_dist
 from repro.nn.interactions import (autoint_layer_apply, autoint_layer_init,
                                    bilinear_apply, bilinear_init, cin_apply,
                                    cin_init, cross_net_apply, cross_net_init,
@@ -44,10 +45,14 @@ class RecsysConfig:
     attn_heads: int = 0
     tower_mlp: Tuple[int, ...] = ()  # two-tower
     n_user_fields: int = 0           # two-tower: first k fields are user side
-    # embedding substrate
-    embedding: str = "robe"          # "robe" | "full"
+    # embedding substrate — any registered EmbeddingBackend name
+    embedding: str = "robe"          # "full" | "robe" | "hashed" | "tt"
     robe_size: int = 0
     robe_block: int = 32
+    robe_shard_model: bool = False   # ZeRO-3 ROBE: array sharded over model,
+    # all-gathered per step (arrays beyond a replica's HBM)
+    hashed_buckets: int = 0          # QR remainder buckets (0 = auto)
+    tt_rank: int = 0                 # tensor-train core rank (0 = default)
     use_kernel: bool = False
     full_table_shard: str = "model"  # "model" | "2d" (rows over ALL devices;
     # kills the data-axis dense table-grad all-reduce — §Perf iteration)
@@ -55,12 +60,20 @@ class RecsysConfig:
 
     def embedding_spec(self) -> EmbeddingSpec:
         robe = None
-        if self.embedding == "robe":
+        if self.robe_size > 0:
             robe = RobeSpec(size=self.robe_size, block_size=self.robe_block,
                             seed=11)
+        placement = "default"
+        if self.robe_shard_model:
+            placement = "model"
+        elif self.full_table_shard == "2d":
+            placement = "2d"
         return EmbeddingSpec(vocab_sizes=self.vocab_sizes,
                              dim=self.embed_dim, kind=self.embedding,
-                             robe=robe, use_kernel=self.use_kernel)
+                             robe=robe, use_kernel=self.use_kernel,
+                             placement=placement,
+                             hashed_buckets=self.hashed_buckets,
+                             tt_rank=self.tt_rank)
 
     @property
     def n_fields(self) -> int:
@@ -121,87 +134,11 @@ def init_params(key, cfg: RecsysConfig) -> dict:
 # ---------------------------------------------------------------------------
 
 def _embed(params, cfg: RecsysConfig, sparse_ids: jnp.ndarray) -> jnp.ndarray:
+    # the substrate owns its distributed lookup (shard_map bodies, batch
+    # layout, collectives) — see repro.nn.embedding_backends
     spec = cfg.embedding_spec()
-    ctx = dist.current()
-    batch = sparse_ids.shape[0]
-    n_data = 1
-    n_model = ctx.mesh.shape["model"] if ctx is not None else 1
-    if ctx is not None:
-        for a in ctx.dp_axes:
-            n_data *= ctx.mesh.shape[a]
-    if ctx is not None and spec.kind == "full" and batch % n_data == 0 \
-            and cfg.full_table_shard == "2d" \
-            and batch % (n_data * n_model) == 0:
-        # §Perf (dlrm-rm2 hillclimb): rows sharded over the WHOLE mesh.
-        # Each device all-gathers the (tiny) global index set, computes
-        # masked partials against its unique row slice, and one
-        # reduce-scatter over all axes delivers each device its batch
-        # slice.  Table gradients stay local to their owning shard — the
-        # 2×(table bytes / n_model) data-axis all-reduce of the "model"
-        # layout disappears.
-        from jax.sharding import PartitionSpec as P
-        table = params["embedding"]["table"]
-        dp = ctx.rules.get("batch")
-        dp_t = (dp,) if isinstance(dp, str) else tuple(dp)
-        all_axes = dp_t + ("model",)
-        n_all = n_data * n_model
-        shard_rows = table.shape[0] // n_all
-
-        def body2d(tb, ix):
-            # indices are model-replicated; gather the other data shards'
-            # rows so this device can serve the whole global batch
-            ix_all = jax.lax.all_gather(ix, dp_t, axis=0, tiled=True)
-            g = jnp.asarray(spec.offsets, jnp.int32)[None, :] + ix_all
-            lin = jax.lax.axis_index(all_axes)
-            local = g - lin * shard_rows
-            hit = (local >= 0) & (local < shard_rows)
-            part = jnp.take(tb.astype(cfg.compute_dtype),
-                            jnp.clip(local, 0, shard_rows - 1), axis=0)
-            part = jnp.where(hit[..., None], part, 0)
-            return jax.lax.psum_scatter(part, all_axes,
-                                        scatter_dimension=0, tiled=True)
-
-        emb = jax.shard_map(
-            body2d, mesh=ctx.mesh,
-            in_specs=(P(all_axes, None), P(dp, None)),
-            out_specs=P(all_axes, None, None))(table, sparse_ids)
-        return emb.astype(cfg.compute_dtype)
-    if ctx is not None and spec.kind == "full" and batch % n_data == 0:
-        # the paper's baseline: tables row-sharded over `model`; the lookup
-        # is a masked local gather + batch reduce-scatter (≡ the production
-        # all_to_all embedding exchange). See nn/embeddings.py.  When the
-        # per-data-shard batch doesn't divide by `model`, fall back to a
-        # psum (same semantics, all-reduce volume instead of RS).
-        from jax.sharding import PartitionSpec as P
-        from repro.nn.embeddings import full_lookup_sharded_body
-        table = params["embedding"]["table"]
-        shard_rows = table.shape[0] // n_model
-        dp = ctx.rules.get("batch")
-        dp_t = (dp,) if isinstance(dp, str) else tuple(dp)
-        scatter_ok = (batch // n_data) % n_model == 0
-
-        def body(tb, ix):
-            if scatter_ok:
-                return full_lookup_sharded_body(tb, ix, spec.offsets,
-                                                "model", shard_rows)
-            g = jnp.asarray(spec.offsets, jnp.int32)[None, :] + ix
-            m_idx = jax.lax.axis_index("model")
-            local = g - m_idx * shard_rows
-            hit = (local >= 0) & (local < shard_rows)
-            part = jnp.take(tb, jnp.clip(local, 0, shard_rows - 1), axis=0)
-            part = jnp.where(hit[..., None], part, 0.0)
-            return jax.lax.psum(part, "model")
-
-        out_spec = P(dp_t + ("model",), None, None) if scatter_ok \
-            else P(dp, None, None)
-        emb = jax.shard_map(
-            body, mesh=ctx.mesh,
-            in_specs=(P("model", None), P(dp, None)),
-            out_specs=out_spec)(table, sparse_ids)
-    else:
-        emb = embedding_lookup(params["embedding"], spec, sparse_ids)
-        if ctx is not None and batch % (n_data * n_model) == 0:
-            emb = dist.shard(emb, "flat_batch", None, None)
+    emb = embedding_lookup_dist(params["embedding"], spec, sparse_ids,
+                                compute_dtype=cfg.compute_dtype)
     return emb.astype(cfg.compute_dtype)
 
 

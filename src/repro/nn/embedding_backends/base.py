@@ -1,0 +1,157 @@
+"""The ``EmbeddingBackend`` protocol and registry.
+
+An embedding *backend* is one substrate for the model's categorical
+features: a way to store the logical [total_rows, dim] table and answer
+row lookups.  The paper's comparison axis — full table vs ROBE array — is
+two instances of this protocol; ``hashed`` (QR compositional hashing) and
+``tt`` (tensor-train factorization) are the community baselines it is
+benchmarked against.  Everything the rest of the stack needs to know about
+a substrate hangs off the backend object:
+
+* ``init(key, spec, pad_rows_to)``      -> parameter pytree
+* ``lookup(params, spec, idx, fields)`` -> [B, F', dim] embeddings
+* ``lookup_bag(params, spec, idx, ...)``-> pooled multi-hot lookups
+* ``lookup_dist(params, spec, idx)``    -> the distributed lookup under the
+  active ``repro.dist`` context (shard_map bodies live in the backend, not
+  in the model)
+* ``param_specs(spec, rules)``          -> PartitionSpec tree for the
+  parameter pytree (consumed by ``repro.dist.param_specs.recsys_specs``)
+* ``cost(spec, batch)``                 -> {"params", "bytes_fetched",
+  "flops"} — the roofline/benchmark cost model, owned by the substrate
+* ``local_batch``                       — True when lookups need no
+  model-axis exchange, so recsys batches may shard over the WHOLE mesh
+
+Backends self-register at import (``repro.nn.embedding_backends``
+imports all four); ``get_backend(name)`` is the only dispatch point —
+no ``kind == "robe"`` string branches exist outside backend modules.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def axes_tuple(rule) -> tuple:
+    """Normalize a rules-table entry (None | str | tuple) to a tuple."""
+    if rule is None:
+        return ()
+    return (rule,) if isinstance(rule, str) else tuple(rule)
+
+
+def axes_entry(axes: tuple):
+    """One PartitionSpec dimension entry from a mesh-axes tuple."""
+    return axes[0] if len(axes) == 1 else axes
+
+
+class EmbeddingBackend:
+    """Base class: generic bag pooling + replicated-local distribution."""
+
+    name: str = ""
+    #: lookups are device-local (no model-axis embedding exchange) — the
+    #: batch may shard over every mesh axis (the "flat_batch" rule)
+    local_batch: bool = True
+
+    # -- construction ------------------------------------------------------
+
+    def validate(self, spec) -> None:
+        """Raise if ``spec`` is not usable with this backend."""
+
+    def init(self, key: jax.Array, spec, pad_rows_to: int = 1) -> dict:
+        raise NotImplementedError
+
+    # -- lookups -----------------------------------------------------------
+
+    def lookup(self, params: dict, spec, idx: jnp.ndarray,
+               fields: Optional[Tuple[int, ...]] = None) -> jnp.ndarray:
+        """idx [B, F'] int32 per-field row ids -> [B, F', dim]."""
+        raise NotImplementedError
+
+    def lookup_bag(self, params: dict, spec, idx: jnp.ndarray,
+                   combiner: str = "sum",
+                   weights: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+        """idx [B, F, bag] (−1 padded) -> [B, F, dim].
+
+        JAX has no native EmbeddingBag: every backend pools via gather +
+        masked (weighted) segment reduction.  ``weights`` [B, F, bag] are
+        per-sample bag weights; ``combiner="mean"`` divides by the weight
+        mass (matching ``repro.core.robe.robe_lookup_bag``).
+        """
+        b, f, bag = idx.shape
+        mask = idx >= 0
+        safe = jnp.where(mask, idx, 0)
+        # fold the bag into the batch so each column keeps its field id
+        # (per-field offsets/hashes stay aligned)
+        flat = jnp.swapaxes(safe, 1, 2).reshape(b * bag, f)
+        emb = jnp.swapaxes(
+            self.lookup(params, spec, flat).reshape(b, bag, f, spec.dim),
+            1, 2)                                    # [b, f, bag, dim]
+        w = mask.astype(emb.dtype)
+        if weights is not None:
+            w = w * weights.astype(emb.dtype)
+        emb = emb * w[..., None]
+        out = emb.sum(axis=2)
+        if combiner == "mean":
+            # divide by the actual weight mass (fractional weights < 1 must
+            # not be clamped away); empty bags (mass 0) pool to zero
+            mass = w.sum(axis=2, keepdims=True).astype(out.dtype)
+            out = jnp.where(mass > 0, out / jnp.where(mass > 0, mass, 1.0),
+                            0.0)
+        elif combiner != "sum":
+            raise ValueError(f"unknown combiner {combiner}")
+        return out
+
+    def lookup_dist(self, params: dict, spec, idx: jnp.ndarray, *,
+                    compute_dtype=None) -> jnp.ndarray:
+        """Lookup under the active DistContext (no-op context → local).
+
+        Default: parameters are replicated and lookups purely local, so the
+        batch (and the [B, F, dim] activation) shards over the whole mesh
+        when divisible — zero embedding collectives.
+        """
+        from repro.dist import api as dist
+        emb = self.lookup(params, spec, idx)
+        ctx = dist.current()
+        if ctx is not None and idx.shape[0] % ctx.n_devices == 0:
+            emb = dist.shard(emb, "flat_batch", None, None)
+        return emb
+
+    # -- metadata ----------------------------------------------------------
+
+    def param_specs(self, spec, rules: Dict) -> dict:
+        """PartitionSpec tree matching ``init``'s parameter pytree."""
+        raise NotImplementedError
+
+    def param_count(self, spec) -> int:
+        raise NotImplementedError
+
+    def cost(self, spec, batch: int) -> dict:
+        """Per-step cost model for ``batch`` examples (each example reads
+        ``n_fields`` rows of ``dim``): trained parameter count, HBM bytes
+        fetched by the lookups, and lookup arithmetic FLOPs."""
+        raise NotImplementedError
+
+
+_REGISTRY: Dict[str, EmbeddingBackend] = {}
+
+
+def register_backend(backend: EmbeddingBackend) -> EmbeddingBackend:
+    if not backend.name:
+        raise ValueError("backend must carry a non-empty .name")
+    _REGISTRY[backend.name] = backend
+    return backend
+
+
+def get_backend(name: str) -> EmbeddingBackend:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown embedding backend {name!r}; registered: "
+                       f"{backend_names()}") from None
+
+
+def backend_names() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))

@@ -1,0 +1,121 @@
+"""``robe`` — the paper's Random Offset Block Embedding array.
+
+One shared circular array of ``spec.robe.size`` float slots replaces every
+table (``repro.core.robe`` holds the hash math; ``repro.kernels.ops`` the
+Pallas lookup).  Placement (``spec.placement``):
+
+* ``"default"`` / ``"replicated"`` — the array is tiny (~100 MB for the
+  paper's CriteoTB model), so it is replicated and lookups are purely
+  local: the embedding-exchange collective disappears and only the
+  |M|-sized gradient all-reduce remains.  Batches shard over the whole
+  mesh.
+* ``"model"`` — ZeRO-3 style, for ROBE arrays beyond a replica's HBM
+  (beyond-paper extension): the array is sharded over `model` and
+  all-gathered once per step before the (still-local) lookups; the
+  gather's transpose is a reduce-scatter of the slot gradients back to
+  their owning shard.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.robe import init_memory
+from repro.nn.embedding_backends.base import (EmbeddingBackend, axes_entry,
+                                              axes_tuple, register_backend)
+
+
+def robe_allgather_body(mem_shard: jnp.ndarray, model_axis: str
+                        ) -> jnp.ndarray:
+    """ZeRO-3-style: gather the (sharded) ROBE array before local lookups.
+
+    Called INSIDE shard_map.  Autodiff transposes the tiled all_gather into
+    a psum_scatter — slot gradients reduce back to their owning shard.
+    """
+    return jax.lax.all_gather(mem_shard, model_axis, axis=0, tiled=True)
+
+
+def analytic_max_fetches(d: int, z: int, bus: int) -> float:
+    """Paper Table 1 bound: max B-sized bus fetches per d-dim row at block
+    size Z.  The substrate's memory-traffic model (see ``cost``)."""
+    if z >= d:
+        return d / bus + 2
+    if z >= bus:
+        return d / bus + d / z
+    return 2 * d / z
+
+
+class RobeBackend(EmbeddingBackend):
+    name = "robe"
+    local_batch = True           # lookups never exchange over `model`
+
+    def validate(self, spec) -> None:
+        if spec.robe is None:
+            raise ValueError("robe spec required for kind='robe'")
+
+    def init(self, key, spec, pad_rows_to: int = 1) -> dict:
+        return {"memory": init_memory(key, spec.robe)}
+
+    def lookup(self, params, spec, idx, fields=None):
+        from repro.kernels.ops import robe_lookup
+        fields = fields if fields is not None else tuple(range(spec.n_fields))
+        return robe_lookup(params["memory"], idx, tuple(fields), spec.dim,
+                           spec.robe, spec.use_kernel)
+
+    def lookup_dist(self, params, spec, idx, *, compute_dtype=None):
+        from repro.dist import api as dist
+        ctx = dist.current()
+        if ctx is None or spec.placement != "model":
+            return super().lookup_dist(params, spec, idx,
+                                       compute_dtype=compute_dtype)
+        # ZeRO-3 path: memory sharded over `model`, gathered per step
+        mem = params["memory"]
+        n_model = ctx.mesh.shape["model"]
+        batch = idx.shape[0]
+        n_all = ctx.n_devices
+        if mem.shape[0] % n_model != 0 or batch % n_all != 0:
+            # non-divisible cases: local lookup; GSPMD gathers the memory
+            return super().lookup_dist(params, spec, idx,
+                                       compute_dtype=compute_dtype)
+        dp = ctx.rules.get("batch")
+        every = axes_tuple(dp) + ("model",)
+        fields = tuple(range(spec.n_fields))
+
+        def body(mem_shard, ix):
+            from repro.kernels.ops import robe_lookup
+            full = robe_allgather_body(mem_shard, "model")
+            return robe_lookup(full, ix, fields, spec.dim, spec.robe,
+                               spec.use_kernel)
+
+        return jax.shard_map(
+            body, mesh=ctx.mesh,
+            in_specs=(P("model"), P(every, None)),
+            out_specs=P(every, None, None))(mem, idx)
+
+    def param_specs(self, spec, rules) -> dict:
+        if spec.placement == "model":
+            rows = axes_tuple(rules.get("table_rows", "model"))
+            return {"memory": P(axes_entry(rows))}
+        return {"memory": P()}
+
+    def param_count(self, spec) -> int:
+        return spec.robe.size
+
+    def cost(self, spec, batch: int, bus: int = 16) -> dict:
+        # block-coalesced reads: ≤ analytic_max_fetches bus lines per row
+        # (paper Table 1); hashing is ~10 int ops per element, plus the
+        # optional sign multiply
+        z = spec.robe.block_size
+        fetches = analytic_max_fetches(spec.dim, z, bus)
+        flops = 10 * batch * spec.n_fields * spec.dim
+        if spec.robe.use_sign:
+            flops += batch * spec.n_fields * spec.dim
+        return {"params": self.param_count(spec),
+                "bytes_fetched": int(batch * spec.n_fields * fetches
+                                     * bus * 4),
+                "flops": flops}
+
+
+register_backend(RobeBackend())

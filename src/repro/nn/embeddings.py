@@ -1,52 +1,80 @@
-"""Embedding substrates: the full-table baseline and the ROBE array.
+"""Embedding front-end: ``EmbeddingSpec`` + the ``EmbeddingBackend`` API.
 
-Two interchangeable implementations behind one API (this is the paper's
-comparison axis):
+The paper's entire comparison axis is "same model, different embedding
+substrate".  That axis is a *protocol*, not an if-branch: every substrate
+is an ``EmbeddingBackend`` (``repro.nn.embedding_backends``) registered by
+name and selected via ``EmbeddingSpec.kind``:
 
-* ``kind="full"`` — the uncompressed baseline.  All fields' tables are
-  concatenated into one [total_rows, dim] blob (per-field row offsets), which
-  under the production mesh is **row-sharded over the `model` axis** — the
-  classic model-parallel DLRM layout the paper's "Original(100GB)" runs use.
-  The distributed lookup is a masked local gather + ``psum_scatter`` over
-  `model` (semantically the Neo-style all_to_all exchange: same bytes on the
-  wire, one collective).
+* ``"full"``   — the uncompressed baseline.  All fields' tables concatenate
+  into one [total_rows, dim] blob, row-sharded over `model` on the
+  production mesh (the classic model-parallel DLRM layout); the distributed
+  lookup is a masked local gather + ``psum_scatter`` (≡ the Neo-style
+  all_to_all exchange).  ``placement="2d"`` shards rows over the whole mesh.
+* ``"robe"``   — the paper's technique: one tiny shared ROBE array replaces
+  every table, replicated, lookups purely local — the embedding exchange
+  disappears.  ``placement="model"`` shards the array ZeRO-3 style and
+  all-gathers it per step (arrays beyond HBM; beyond-paper extension).
+* ``"hashed"`` — QR compositional hashing-trick baseline (quotient ×
+  remainder tables, collision-free pair decomposition).
+* ``"tt"``     — tensor-train factorized tables (TT-Rec baseline): three
+  small cores, rows contracted on the fly.
 
-* ``kind="robe"`` — the paper's technique.  One shared ROBE array of
-  ``spec.robe.size`` slots replaces every table; it is tiny, so it is
-  **replicated** and lookups are purely local: the embedding exchange
-  collective disappears and only the |M|-sized gradient all-reduce remains.
-  (`robe_shard_model=True` optionally shards the array over `model` and
-  all-gathers it per step — for arrays beyond HBM; beyond-paper extension.)
+Each backend owns its init, lookups, PartitionSpec tree (consumed by
+``repro.dist.param_specs``), distributed shard_map bodies, and roofline
+cost model — ``get_backend(spec.kind)`` is the only dispatch point.
 
-JAX has no EmbeddingBag: multi-hot lookups are gather + segment reduction
-(``robe_lookup_bag`` / masked sum here), as the assignment requires.
+``embedding_init`` / ``embedding_lookup`` / ``embedding_lookup_bag`` below
+are thin wrappers over the backend so existing callers keep working.  JAX
+has no EmbeddingBag: multi-hot lookups are gather + segment reduction in
+every backend, as the assignment requires.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence, Tuple
+import functools
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import PartitionSpec as P
 
-from repro.core.robe import RobeSpec, init_memory, robe_lookup as robe_lookup_jnp
-from repro.kernels.ops import robe_lookup as robe_lookup_op
+from repro.core.robe import RobeSpec
+from repro.nn.embedding_backends import (backend_names,            # noqa: F401
+                                         full_lookup_sharded_body,
+                                         get_backend,
+                                         robe_allgather_body)
+
+__all__ = ["EmbeddingSpec", "embedding_init", "embedding_lookup",
+           "embedding_lookup_bag", "embedding_lookup_dist", "get_backend",
+           "backend_names", "full_lookup_sharded_body",
+           "robe_allgather_body"]
 
 
 @dataclasses.dataclass(frozen=True)
 class EmbeddingSpec:
     vocab_sizes: Tuple[int, ...]          # rows per categorical field
     dim: int
-    kind: str = "robe"                    # "full" | "robe"
+    kind: str = "robe"                    # any registered backend name
     robe: Optional[RobeSpec] = None
     use_kernel: bool = False              # Pallas path for the robe lookup
+    placement: str = "default"            # backend-interpreted layout knob:
+    #   full: "default"/"model" row-shard | "2d" whole-mesh row-shard
+    #   robe: "default" replicated | "model" ZeRO-3 sharded + all-gather
+    hashed_buckets: int = 0               # QR remainder buckets (0 = auto)
+    tt_rank: int = 0                      # TT core rank (0 = default 8)
 
     def __post_init__(self):
-        if self.kind == "robe" and self.robe is None:
-            raise ValueError("robe spec required for kind='robe'")
+        object.__setattr__(self, "vocab_sizes",
+                           tuple(int(v) for v in self.vocab_sizes))
+        if not self.vocab_sizes:
+            raise ValueError("vocab_sizes must be non-empty")
+        if any(v <= 0 for v in self.vocab_sizes):
+            raise ValueError(f"vocab_sizes must be positive, got "
+                             f"{self.vocab_sizes}")
+        if self.dim <= 0:
+            raise ValueError(f"dim must be positive, got {self.dim}")
+        get_backend(self.kind).validate(self)
 
     @property
     def n_fields(self) -> int:
@@ -56,37 +84,30 @@ class EmbeddingSpec:
     def total_rows(self) -> int:
         return int(sum(self.vocab_sizes))
 
-    @property
+    @functools.cached_property
     def offsets(self) -> np.ndarray:
+        """Per-field row offsets into the concatenated logical table.
+        Cached: lookups index this on every trace."""
         return np.concatenate([[0], np.cumsum(self.vocab_sizes)[:-1]]
                               ).astype(np.int64)
 
     @property
     def param_count(self) -> int:
-        if self.kind == "robe":
-            return self.robe.size
-        return self.total_rows * self.dim
+        return get_backend(self.kind).param_count(self)
 
     @property
     def compression(self) -> float:
         return (self.total_rows * self.dim) / max(1, self.param_count)
 
 
+# ---------------------------------------------------------------------------
+# thin compatibility wrappers over the backend protocol
+# ---------------------------------------------------------------------------
+
 def embedding_init(key: jax.Array, spec: EmbeddingSpec,
                    pad_rows_to: int = 1) -> dict:
-    if spec.kind == "robe":
-        return {"memory": init_memory(key, spec.robe)}
-    rows = spec.total_rows
-    rows = ((rows + pad_rows_to - 1) // pad_rows_to) * pad_rows_to
-    scale = 1.0 / np.sqrt(spec.dim)
-    table = jax.random.uniform(key, (rows, spec.dim), jnp.float32,
-                               -scale, scale)
-    return {"table": table}
+    return get_backend(spec.kind).init(key, spec, pad_rows_to=pad_rows_to)
 
-
-# ---------------------------------------------------------------------------
-# local (single-device / auto-sharded) lookup
-# ---------------------------------------------------------------------------
 
 def embedding_lookup(params: dict, spec: EmbeddingSpec,
                      idx: jnp.ndarray,
@@ -96,62 +117,25 @@ def embedding_lookup(params: dict, spec: EmbeddingSpec,
     ``fields`` selects a subset of the spec's fields (default: all, in
     order) — e.g. the item-side fields for retrieval candidate scoring.
     """
-    fields = fields if fields is not None else tuple(range(spec.n_fields))
-    if spec.kind == "robe":
-        return robe_lookup_op(params["memory"], idx, tuple(fields), spec.dim,
-                              spec.robe, spec.use_kernel)
-    off = jnp.asarray(spec.offsets[list(fields)], jnp.int32)
-    return jnp.take(params["table"], idx + off[None, :], axis=0)
+    return get_backend(spec.kind).lookup(params, spec, idx, fields)
 
-
-# ---------------------------------------------------------------------------
-# distributed lookup bodies — called INSIDE shard_map
-# ---------------------------------------------------------------------------
-
-def full_lookup_sharded_body(table_shard: jnp.ndarray, idx: jnp.ndarray,
-                             offsets: np.ndarray, model_axis: str,
-                             shard_rows: int) -> jnp.ndarray:
-    """Masked local gather + batch reduce-scatter over the model axis.
-
-    table_shard: [rows/model, dim] this shard's rows.
-    idx:         [B_data, F] global row ids for this data-shard's batch.
-    returns      [B_data/model, F, dim] — batch now sharded over model too.
-    """
-    g = jnp.asarray(offsets, jnp.int32)[None, :] + idx        # global rows
-    m_idx = jax.lax.axis_index(model_axis)
-    lo = m_idx * shard_rows
-    local = g - lo
-    hit = (local >= 0) & (local < shard_rows)
-    safe = jnp.clip(local, 0, shard_rows - 1)
-    part = jnp.take(table_shard, safe, axis=0)                # [B, F, dim]
-    part = jnp.where(hit[..., None], part, 0.0)
-    # equivalent to the production all_to_all embedding exchange
-    return jax.lax.psum_scatter(part, model_axis, scatter_dimension=0,
-                                tiled=True)
-
-
-def robe_allgather_body(mem_shard: jnp.ndarray, model_axis: str
-                        ) -> jnp.ndarray:
-    """ZeRO-3-style: gather the (sharded) ROBE array before local lookups."""
-    return jax.lax.all_gather(mem_shard, model_axis, axis=0, tiled=True)
-
-
-# ---------------------------------------------------------------------------
-# bag (multi-hot) lookup — EmbeddingBag built from gather + segment reduce
-# ---------------------------------------------------------------------------
 
 def embedding_lookup_bag(params: dict, spec: EmbeddingSpec,
                          idx: jnp.ndarray,
-                         combiner: str = "sum") -> jnp.ndarray:
-    """idx [B, F, bag] (−1 padded) -> [B, F, dim]."""
-    b, f, bag = idx.shape
-    mask = idx >= 0
-    safe = jnp.where(mask, idx, 0)
-    flat = embedding_lookup(params, spec, safe.reshape(b, f * bag)
-                            ).reshape(b, f, bag, spec.dim)
-    flat = flat * mask[..., None].astype(flat.dtype)
-    out = flat.sum(axis=2)
-    if combiner == "mean":
-        out = out / jnp.maximum(mask.sum(axis=2, keepdims=True), 1
-                                ).astype(out.dtype)
-    return out
+                         combiner: str = "sum",
+                         weights: Optional[jnp.ndarray] = None
+                         ) -> jnp.ndarray:
+    """idx [B, F, bag] (−1 padded) -> [B, F, dim]; optional per-sample
+    ``weights`` [B, F, bag] (mean divides by the weight mass)."""
+    return get_backend(spec.kind).lookup_bag(params, spec, idx,
+                                             combiner=combiner,
+                                             weights=weights)
+
+
+def embedding_lookup_dist(params: dict, spec: EmbeddingSpec,
+                          idx: jnp.ndarray,
+                          compute_dtype=None) -> jnp.ndarray:
+    """Distributed lookup under the active ``repro.dist`` context (local
+    lookup outside one).  The shard_map bodies live in the backends."""
+    return get_backend(spec.kind).lookup_dist(params, spec, idx,
+                                              compute_dtype=compute_dtype)

@@ -27,6 +27,14 @@ class MicroBatcher:
     _queue: List[dict] = dataclasses.field(default_factory=list)
 
     def submit(self, request: dict) -> None:
+        # reject at the door (a clear error naming the keys), not as a
+        # KeyError deep in np.stack — and without poisoning the queue:
+        # already-accepted requests stay servable
+        if self._queue and set(request) != set(self._queue[0]):
+            raise ValueError(
+                f"MicroBatcher: request keys {sorted(request)} != the "
+                f"queued batch's keys {sorted(self._queue[0])}; all "
+                f"requests in a batch must share the same feature keys")
         self._queue.append(request)
 
     def flush(self) -> List[np.ndarray]:

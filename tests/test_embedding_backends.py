@@ -1,0 +1,234 @@
+"""EmbeddingBackend protocol: registry, per-backend forward + gradient
+parity against independent jnp references, bag pooling with per-sample
+weights, spec validation/caching, and PartitionSpec ownership."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.core.robe import RobeSpec, robe_lookup as robe_lookup_core
+from repro.kernels.ref import qr_materialize_ref, tt_materialize_ref
+from repro.nn.embeddings import (EmbeddingSpec, backend_names,
+                                 embedding_init, embedding_lookup,
+                                 embedding_lookup_bag, get_backend)
+
+VOCABS = (40, 24, 64)
+DIM = 8
+BACKENDS = ("full", "robe", "hashed", "tt")
+
+
+def _spec(kind: str, **kw) -> EmbeddingSpec:
+    kw.setdefault("robe", RobeSpec(size=512, block_size=8, seed=3))
+    kw.setdefault("hashed_buckets", 16)
+    kw.setdefault("tt_rank", 4)
+    return EmbeddingSpec(vocab_sizes=VOCABS, dim=DIM, kind=kind, **kw)
+
+
+def _reference_table(params: dict, spec: EmbeddingSpec) -> jnp.ndarray:
+    """The full [total_rows, dim] logical table each substrate represents,
+    materialized through an INDEPENDENT jnp path (whole-table einsums /
+    core-module lookups, not the backend's per-row code)."""
+    if spec.kind == "full":
+        return params["table"][:spec.total_rows]
+    if spec.kind == "robe":
+        rows = jnp.arange(spec.total_rows, dtype=jnp.int32)
+        tids = np.repeat(np.arange(spec.n_fields, dtype=np.uint32),
+                         np.asarray(spec.vocab_sizes))
+        local = rows - jnp.asarray(spec.offsets, jnp.int32)[tids]
+        return robe_lookup_core(params["memory"], spec.robe,
+                                jnp.asarray(tids), local, spec.dim)
+    if spec.kind == "hashed":
+        return qr_materialize_ref(params["q_table"], params["r_table"],
+                                  spec.vocab_sizes, spec.hashed_buckets)
+    if spec.kind == "tt":
+        return tt_materialize_ref(params["core0"], params["core1"],
+                                  params["core2"])[:spec.total_rows]
+    raise AssertionError(spec.kind)
+
+
+def test_registry_returns_all_four():
+    for name in BACKENDS:
+        assert get_backend(name).name == name
+    assert set(BACKENDS) <= set(backend_names())
+
+
+def test_unknown_backend_raises_with_names():
+    with pytest.raises(KeyError, match="robe"):
+        get_backend("no-such-substrate")
+
+
+@pytest.mark.parametrize("kind", BACKENDS)
+def test_lookup_matches_reference(kind):
+    spec = _spec(kind)
+    params = embedding_init(jax.random.PRNGKey(0), spec)
+    rs = np.random.RandomState(1)
+    idx = jnp.asarray(rs.randint(0, min(VOCABS), (16, 3)), jnp.int32)
+    got = embedding_lookup(params, spec, idx)
+    table = _reference_table(params, spec)
+    g = jnp.asarray(spec.offsets, jnp.int32)[None, :] + idx
+    want = jnp.take(table, g, axis=0)
+    assert got.shape == (16, 3, DIM)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("kind", BACKENDS)
+def test_grad_matches_reference(kind):
+    spec = _spec(kind)
+    params = embedding_init(jax.random.PRNGKey(0), spec)
+    rs = np.random.RandomState(2)
+    idx = jnp.asarray(rs.randint(0, min(VOCABS), (8, 3)), jnp.int32)
+    ct = jnp.asarray(rs.randn(8, 3, DIM), jnp.float32)
+    g = jnp.asarray(spec.offsets, jnp.int32)[None, :] + idx
+
+    def loss_backend(p):
+        return (embedding_lookup(p, spec, idx) * ct).sum()
+
+    def loss_reference(p):
+        return (jnp.take(_reference_table(p, spec), g, axis=0) * ct).sum()
+
+    gb = jax.grad(loss_backend)(params)
+    gr = jax.grad(loss_reference)(params)
+    err = jax.tree.reduce(max, jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a - b))), gb, gr))
+    assert err < 1e-5, err
+
+
+@pytest.mark.parametrize("kind", BACKENDS)
+def test_field_subset_lookup(kind):
+    spec = _spec(kind)
+    params = embedding_init(jax.random.PRNGKey(0), spec)
+    rs = np.random.RandomState(3)
+    idx_all = jnp.asarray(rs.randint(0, min(VOCABS), (6, 3)), jnp.int32)
+    want = embedding_lookup(params, spec, idx_all)[:, 1:]
+    got = embedding_lookup(params, spec, idx_all[:, 1:], fields=(1, 2))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6)
+
+
+@pytest.mark.parametrize("kind", BACKENDS)
+def test_lookup_bag_mean_with_weights(kind):
+    """EmbeddingBag parity: weighted mean over a −1-padded bag equals the
+    explicit per-slot weighted average of single lookups."""
+    spec = _spec(kind)
+    params = embedding_init(jax.random.PRNGKey(0), spec)
+    rs = np.random.RandomState(4)
+    b, f, bag = 5, 3, 4
+    idx = rs.randint(0, min(VOCABS), (b, f, bag))
+    idx[0, 0, 2:] = -1                     # padded tail
+    idx[2, 1, :] = -1                      # fully-empty bag
+    # fractional masses (< 1) must divide by the true weight mass, not a
+    # clamped max(mass, 1)
+    w = (rs.rand(b, f, bag) * 0.3).astype(np.float32)
+    idx_j, w_j = jnp.asarray(idx, jnp.int32), jnp.asarray(w)
+
+    got = embedding_lookup_bag(params, spec, idx_j, combiner="mean",
+                               weights=w_j)
+    acc = np.zeros((b, f, DIM), np.float32)
+    wm = np.zeros((b, f), np.float32)
+    for j in range(bag):
+        ej = np.asarray(embedding_lookup(
+            params, spec, jnp.asarray(np.maximum(idx[:, :, j], 0),
+                                      jnp.int32)))
+        wj = w[:, :, j] * (idx[:, :, j] >= 0)
+        acc += ej * wj[..., None]
+        wm += wj
+    want = np.where(wm[..., None] > 0,
+                    acc / np.where(wm > 0, wm, 1.0)[..., None], 0.0)
+    assert got.shape == (b, f, DIM)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-4, atol=1e-5)
+
+
+def test_lookup_bag_sum_unweighted_masks_padding():
+    spec = _spec("full")
+    params = embedding_init(jax.random.PRNGKey(0), spec)
+    idx = jnp.asarray([[[2, 5, -1]]], jnp.int32)
+    got = embedding_lookup_bag(params, spec,
+                               jnp.tile(idx, (1, 3, 1)), combiner="sum")
+    e = embedding_lookup(params, spec, jnp.asarray([[2, 2, 2], [5, 5, 5]],
+                                                   jnp.int32))
+    np.testing.assert_allclose(np.asarray(got[0]),
+                               np.asarray(e[0] + e[1]), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# spec hygiene (construction-time validation + cached offsets)
+# ---------------------------------------------------------------------------
+
+def test_offsets_cached_and_correct():
+    spec = _spec("full")
+    assert spec.offsets is spec.offsets          # cached, not recomputed
+    np.testing.assert_array_equal(spec.offsets, np.asarray([0, 40, 64]))
+
+
+@pytest.mark.parametrize("bad", [(), (100, 0), (100, -3), (0,)])
+def test_vocab_sizes_validated(bad):
+    with pytest.raises(ValueError):
+        EmbeddingSpec(vocab_sizes=bad, dim=8, kind="full")
+
+
+def test_robe_requires_robe_spec():
+    with pytest.raises(ValueError, match="robe spec"):
+        EmbeddingSpec(vocab_sizes=VOCABS, dim=8, kind="robe", robe=None)
+
+
+# ---------------------------------------------------------------------------
+# layout + config sweep
+# ---------------------------------------------------------------------------
+
+def test_param_specs_owned_by_backend():
+    rules = {"batch": "data", "table_rows": "model"}
+    assert get_backend("full").param_specs(_spec("full"), rules) \
+        == {"table": P("model", None)}
+    assert get_backend("full").param_specs(
+        _spec("full", placement="2d"), rules) \
+        == {"table": P(("data", "model"), None)}
+    assert get_backend("robe").param_specs(_spec("robe"), rules) \
+        == {"memory": P()}
+    assert get_backend("robe").param_specs(
+        _spec("robe", placement="model"), rules) \
+        == {"memory": P("model")}
+    for kind in ("hashed", "tt"):
+        tree = get_backend(kind).param_specs(_spec(kind), rules)
+        assert all(s == P() for s in jax.tree.leaves(
+            tree, is_leaf=lambda x: isinstance(x, P)))
+
+
+def test_recsys_specs_delegate_embedding_subtree():
+    from repro.dist.param_specs import recsys_specs
+    spec = _spec("full")
+    pshapes = {"embedding": {"table": jax.ShapeDtypeStruct(
+        (128, DIM), jnp.float32)},
+        "top": [jax.ShapeDtypeStruct((4, 4), jnp.float32)]}
+    rules = {"batch": "data", "table_rows": "model"}
+    out = recsys_specs(pshapes, rules, embedding_spec=spec)
+    assert out["embedding"]["table"] == P("model", None)
+    assert out["top"][0] == P()
+
+
+@pytest.mark.parametrize("kind", BACKENDS)
+def test_dlrm_config_sweeps_backend(kind):
+    from repro.configs import get_arch
+    from repro.models import recsys as R
+    cfg = get_arch("dlrm-rm2").make_config("smoke", embedding=kind)
+    rs = np.random.RandomState(0)
+    batch = {"sparse": jnp.asarray(rs.randint(0, 40, (8, cfg.n_fields)),
+                                   jnp.int32),
+             "dense": jnp.asarray(rs.randn(8, cfg.n_dense), jnp.float32),
+             "label": jnp.asarray(rs.randint(0, 2, (8,)), jnp.int32)}
+    loss, grads = jax.value_and_grad(
+        lambda p: R.loss_fn(p, cfg, batch)[0]
+    )(R.init_params(jax.random.PRNGKey(0), cfg))
+    assert bool(jnp.isfinite(loss))
+    assert all(bool(jnp.all(jnp.isfinite(l))) for l in jax.tree.leaves(grads))
+
+
+@pytest.mark.parametrize("kind", BACKENDS)
+def test_cost_model_shape(kind):
+    spec = _spec(kind)
+    c = get_backend(kind).cost(spec, batch=1024)
+    assert set(c) == {"params", "bytes_fetched", "flops"}
+    assert c["params"] == spec.param_count > 0
+    assert c["bytes_fetched"] > 0

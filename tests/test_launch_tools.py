@@ -66,6 +66,40 @@ def test_micro_batcher_pads_and_orders():
     assert all(s == (4, 2) for s in calls)       # fixed compiled shape
 
 
+def test_micro_batcher_pad_tail_repeats_last_row():
+    """The short tail pads by repeating the last request up to the compiled
+    shape, and only the real rows come back."""
+    from repro.serve.serving import MicroBatcher
+    seen = []
+
+    def score(batch):
+        seen.append(np.asarray(batch["x"]))
+        return jnp.asarray(batch["x"][:, 0], jnp.float32)
+
+    mb = MicroBatcher(batch_size=4, score_fn=score)
+    for i in range(3):                   # 3 < batch_size: pure pad-tail path
+        mb.submit({"x": np.asarray([i, 9], np.float32)})
+    out = mb.flush()
+    assert [float(o) for o in out] == [0, 1, 2]
+    assert seen[0].shape == (4, 2)
+    np.testing.assert_array_equal(seen[0][3], seen[0][2])   # repeated tail
+
+
+def test_micro_batcher_rejects_mismatched_keys():
+    """A bad request is rejected at submit (clear error, queue unpoisoned)
+    instead of surfacing as a KeyError deep in np.stack at flush."""
+    from repro.serve.serving import MicroBatcher
+    import pytest
+    mb = MicroBatcher(batch_size=4,
+                      score_fn=lambda b: jnp.asarray(b["x"][:, 0],
+                                                     jnp.float32))
+    mb.submit({"x": np.asarray([7, 0], np.float32)})
+    with pytest.raises(ValueError, match="keys"):
+        mb.submit({"x": np.zeros(2, np.float32), "dense": np.zeros(1)})
+    out = mb.flush()                     # queued request still servable
+    assert [float(o) for o in out] == [7]
+
+
 def test_elastic_checkpoint_resume_across_shapes():
     """A checkpoint written under one 'mesh' restores onto another: arrays
     are saved in logical shapes, the loader re-applies new shardings."""
