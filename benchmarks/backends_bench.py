@@ -2,8 +2,13 @@
 
 One row per registered ``EmbeddingBackend`` at smoke scale: trained
 parameter count, the backend's own cost model (bytes fetched / flops per
-batch), and measured CPU lookup throughput.  The JSON lands at the repo
-root so the perf trajectory of the substrate sweep is recorded per commit.
+batch), and measured CPU lookup throughput.  Substrates with a fused
+Pallas lookup (robe / hashed / tt) get a second row with the kernel path
+forced on, so the fused-vs-jnp trajectory is recorded per commit — every
+row carries a ``kernel`` flag and a ``mode`` field ("jnp", "interpret",
+or "pallas" on a real TPU).  Off-TPU the kernel rows measure interpret
+mode (a correctness proxy, not kernel speed), so they run at a reduced
+batch to keep CI wall-clock sane.  The JSON lands at the repo root.
 """
 
 from __future__ import annotations
@@ -23,16 +28,46 @@ from repro.nn.embeddings import (EmbeddingSpec, backend_names,
 
 BENCH_VOCABS = (50_000, 20_000, 80_000, 5_000, 30_000, 1_000, 15_000, 400)
 DIM = 16
+#: substrates whose lookup has a fused Pallas kernel behind use_kernel
+KERNEL_KINDS = ("robe", "hashed", "tt")
 OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
                         "BENCH_backends.json")
 
 
-def _spec(kind: str) -> EmbeddingSpec:
+def _spec(kind: str, use_kernel: bool = False) -> EmbeddingSpec:
     n_logical = sum(BENCH_VOCABS) * DIM
     return EmbeddingSpec(
-        vocab_sizes=BENCH_VOCABS, dim=DIM, kind=kind,
+        vocab_sizes=BENCH_VOCABS, dim=DIM, kind=kind, use_kernel=use_kernel,
         robe=RobeSpec(size=max(512, n_logical // 1000), block_size=32,
                       seed=11))
+
+
+def _row(kind: str, batch: int, iters: int, idx_np: np.ndarray,
+         use_kernel: bool) -> dict:
+    spec = _spec(kind, use_kernel=use_kernel)
+    params = embedding_init(jax.random.PRNGKey(0), spec)
+    idx = jnp.asarray(idx_np[:batch])
+    fn = jax.jit(lambda p, i, s=spec: embedding_lookup(p, s, i))
+    fn(params, idx).block_until_ready()            # compile
+    t0 = time.monotonic()
+    for _ in range(iters):
+        fn(params, idx).block_until_ready()
+    dt = (time.monotonic() - t0) / iters
+    cost = get_backend(kind).cost(spec, batch)
+    mode = "jnp" if not use_kernel else (
+        "pallas" if jax.default_backend() == "tpu" else "interpret")
+    return {
+        "name": f"backends/{kind}" + ("+kernel" if use_kernel else ""),
+        "kernel": use_kernel,
+        "mode": mode,
+        "batch": batch,
+        "params": int(spec.param_count),
+        "compression": round(float(spec.compression), 1),
+        "lookups_per_s": int(batch * spec.n_fields / dt),
+        "us_per_batch": round(dt * 1e6),
+        "cost_bytes_fetched": int(cost["bytes_fetched"]),
+        "cost_flops": int(cost["flops"]),
+    }
 
 
 def run(batch: int = 8192, iters: int = 16):
@@ -41,25 +76,14 @@ def run(batch: int = 8192, iters: int = 16):
     idx_np = rs.randint(0, min(BENCH_VOCABS),
                         (batch, len(BENCH_VOCABS))).astype(np.int32)
     for kind in backend_names():
-        spec = _spec(kind)
-        params = embedding_init(jax.random.PRNGKey(0), spec)
-        idx = jnp.asarray(idx_np)
-        fn = jax.jit(lambda p, i, s=spec: embedding_lookup(p, s, i))
-        fn(params, idx).block_until_ready()            # compile
-        t0 = time.monotonic()
-        for _ in range(iters):
-            fn(params, idx).block_until_ready()
-        dt = (time.monotonic() - t0) / iters
-        cost = get_backend(kind).cost(spec, batch)
-        rows.append({
-            "name": f"backends/{kind}",
-            "params": int(spec.param_count),
-            "compression": round(float(spec.compression), 1),
-            "lookups_per_s": int(batch * spec.n_fields / dt),
-            "us_per_batch": round(dt * 1e6),
-            "cost_bytes_fetched": int(cost["bytes_fetched"]),
-            "cost_flops": int(cost["flops"]),
-        })
+        rows.append(_row(kind, batch, iters, idx_np, use_kernel=False))
+    # fused rows: full batch on a real TPU; interpret mode off-TPU is a
+    # conformance datapoint, so a slice of the batch + 2 iters suffices
+    on_tpu = jax.default_backend() == "tpu"
+    k_batch = batch if on_tpu else max(256, batch // 16)
+    k_iters = iters if on_tpu else 2
+    for kind in KERNEL_KINDS:
+        rows.append(_row(kind, k_batch, k_iters, idx_np, use_kernel=True))
     return rows
 
 

@@ -19,6 +19,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
+from repro.kernels.robe_lookup import _pick_batch_tile
+
 
 def _kernel(feats_ref, rows_ref, cols_ref, out_ref):
     feats = feats_ref[...]
@@ -40,19 +42,22 @@ def dot_interaction_pallas(feats: jnp.ndarray, self_interaction: bool = False,
     rows, cols = np.tril_indices(f, k=k)
     n_pairs = len(rows)
 
-    budget = 2 * 1024 * 1024 // 4
-    tb = max(1, budget // max(1, f * d))
-    tb = min(tb, b, 512)
-    while b % tb:
-        tb -= 1
+    # pad-and-slice batching (same scheme as the lookup kernels): a prime
+    # batch no longer degrades the tile to a divisor-search remnant
+    tb = _pick_batch_tile(b, f, d)
+    b_pad = ((b + tb - 1) // tb) * tb
+    if b_pad != b:
+        feats = jnp.concatenate(
+            [feats, jnp.zeros((b_pad - b, f, d), feats.dtype)])
 
-    return pl.pallas_call(
+    out = pl.pallas_call(
         _kernel,
-        grid=(b // tb,),
+        grid=(b_pad // tb,),
         in_specs=[pl.BlockSpec((tb, f, d), lambda i: (i, 0, 0)),
                   pl.BlockSpec((n_pairs,), lambda i: (0,)),
                   pl.BlockSpec((n_pairs,), lambda i: (0,))],
         out_specs=pl.BlockSpec((tb, n_pairs), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((b, n_pairs), feats.dtype),
+        out_shape=jax.ShapeDtypeStruct((b_pad, n_pairs), feats.dtype),
         interpret=interpret,
     )(feats, jnp.asarray(rows, jnp.int32), jnp.asarray(cols, jnp.int32))
+    return out[:b] if b_pad != b else out

@@ -6,9 +6,16 @@ into the shared array, expressed as an XLA scatter (segment-sum over slots).
 The scatter IS the semantics of weight sharing — every aliased parameter's
 gradient accumulates into its slot.
 
+``qr_lookup`` / ``tt_lookup`` follow the identical contract for the two
+baseline substrates: fused Pallas forward (index math in-kernel, tables /
+cores VMEM-resident), custom-VJP backward as an XLA scatter-add into the
+tables/cores.
+
 Selection logic: kernels run on TPU, or in interpret mode when
-``force_kernel``; everywhere else the pure-jnp path (same math) keeps CPU
-benchmarks fast.
+``use_kernel`` forces them; everywhere else the pure-jnp path (same math)
+keeps CPU benchmarks fast.  Every fused op must pass the conformance
+harness (tests/test_kernel_conformance.py) before it ships — see ROADMAP
+§Kernel conformance.
 """
 
 from __future__ import annotations
@@ -18,12 +25,15 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.robe import RobeSpec, robe_slots, robe_signs
 from repro.core import robe as _core
 from repro.kernels import ref as _ref
 from repro.kernels.robe_lookup import robe_lookup_pallas
 from repro.kernels.dot_interaction import dot_interaction_pallas
+from repro.kernels.qr_lookup import qr_lookup_pallas
+from repro.kernels.tt_lookup import tt_lookup_pallas
 
 
 def _on_tpu() -> bool:
@@ -72,6 +82,7 @@ def _lookup_bwd(table_ids, dim, spec, use_kernel, res, g):
 robe_lookup.defvjp(_lookup_fwd, _lookup_bwd)
 
 
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
 def dot_interaction(feats: jnp.ndarray, self_interaction: bool = False,
                     use_kernel: bool = False) -> jnp.ndarray:
     """[B, F, D] -> [B, F*(F±1)/2] pairwise dots (DLRM interaction)."""
@@ -81,32 +92,124 @@ def dot_interaction(feats: jnp.ndarray, self_interaction: bool = False,
     return _ref.dot_interaction_ref(feats, self_interaction)
 
 
+def _dot_fwd(feats, self_interaction, use_kernel):
+    out = dot_interaction(feats, self_interaction, use_kernel)
+    return out, (feats,)
+
+
+def _dot_bwd(self_interaction, use_kernel, res, g):
+    # d gram[i,j]/d feats[i] = feats[j]: scatter the triangle cotangent into
+    # a symmetric [F, F] matrix (the transpose add doubles the diagonal,
+    # which IS the self-interaction derivative 2·feats[i]) and contract.
+    # Needed explicitly: the Pallas forward has no autodiff rule, and this
+    # keeps the backward one fused matmul either way.
+    (feats,) = res
+    b, f, _ = feats.shape
+    rows, cols = np.tril_indices(f, k=0 if self_interaction else -1)
+    g32 = g.astype(jnp.float32)
+    sym = jnp.zeros((b, f, f), jnp.float32
+                    ).at[:, rows, cols].add(g32).at[:, cols, rows].add(g32)
+    df = jnp.einsum("bfg,bgd->bfd", sym, feats.astype(jnp.float32))
+    return (df.astype(feats.dtype),)
+
+
+dot_interaction.defvjp(_dot_fwd, _dot_bwd)
+
+
 # ---------------------------------------------------------------------------
-# compressed-substrate lookups (hashed / tensor-train backends).  jnp-only
-# today: both are gather + tiny elementwise/einsum work that XLA already
-# fuses well; a Pallas fusion is a future-kernel item, so the op boundary
-# lives here where the robe kernel's does.
+# compressed-substrate lookups (hashed / tensor-train backends).  Same
+# contract as robe_lookup: forward = fused Pallas kernel (TPU, or interpret
+# mode when forced) or the jnp reference path; backward = an explicit XLA
+# scatter-add of the output grads into the tables/cores, f32-accumulated and
+# delivered in the parameter dtype (mirrors _lookup_bwd).
 # ---------------------------------------------------------------------------
 
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
 def qr_lookup(q_table: jnp.ndarray, r_table: jnp.ndarray,
-              q_idx: jnp.ndarray, r_idx: jnp.ndarray) -> jnp.ndarray:
-    """QR compositional lookup: Q[q_idx] * R[r_idx] -> [..., dim]."""
-    return jnp.take(q_table, q_idx, axis=0) * jnp.take(r_table, r_idx,
-                                                       axis=0)
+              idx: jnp.ndarray, q_off: Tuple[int, ...],
+              r_off: Tuple[int, ...], m: int,
+              use_kernel: bool = False) -> jnp.ndarray:
+    """Fused QR compositional lookup.
 
-
-def tt_lookup(core0: jnp.ndarray, core1: jnp.ndarray, core2: jnp.ndarray,
-              i1: jnp.ndarray, i2: jnp.ndarray, i3: jnp.ndarray,
-              dim: int) -> jnp.ndarray:
-    """Tensor-train row contraction.
-
-    core0 [n1, d1, r], core1 [n2, r, d2, r], core2 [n3, r, d3]; the row
-    (i1, i2, i3) contracts to its [d1·d2·d3] = dim embedding without ever
-    materializing the table.
+    [B, F] int rows -> [B, F, dim] via ``Q[id // m + q_off[f]] *
+    R[id % m + r_off[f]]`` — quotient/remainder indices computed in-path
+    (in-kernel on the Pallas side), both gathers and the product one pass.
     """
-    c1 = jnp.take(core0, i1, axis=0)                # [..., d1, r]
-    c2 = jnp.take(core1, i2, axis=0)                # [..., r, d2, r]
-    c3 = jnp.take(core2, i3, axis=0)                # [..., r, d3]
-    t = jnp.einsum("...ap,...pbq->...abq", c1, c2)  # [..., d1, d2, r]
-    e = jnp.einsum("...abq,...qc->...abc", t, c3)   # [..., d1, d2, d3]
-    return e.reshape(e.shape[:-3] + (dim,))
+    if use_kernel:
+        return qr_lookup_pallas(q_table, r_table, idx, q_off, r_off, m,
+                                interpret=not _on_tpu())
+    return _ref.qr_lookup_ref(q_table, r_table, idx, q_off, r_off, m)
+
+
+def _qr_fwd(q_table, r_table, idx, q_off, r_off, m, use_kernel):
+    out = qr_lookup(q_table, r_table, idx, q_off, r_off, m, use_kernel)
+    return out, (q_table, r_table, idx)
+
+
+def _qr_bwd(q_off, r_off, m, use_kernel, res, g):
+    q_table, r_table, idx = res
+    q_idx, r_idx = _ref.qr_indices(idx, q_off, r_off, m)
+    # product rule: each factor's row grad is the cotangent times the OTHER
+    # factor's row, scatter-added into its table (f32 accumulate, parameter
+    # dtype delivery — the custom_vjp contract, as in _lookup_bwd)
+    g32 = g.astype(jnp.float32)
+    qv = jnp.take(q_table, q_idx, axis=0).astype(jnp.float32)
+    rv = jnp.take(r_table, r_idx, axis=0).astype(jnp.float32)
+    gq = jnp.zeros(q_table.shape, jnp.float32).at[q_idx].add(g32 * rv)
+    gr = jnp.zeros(r_table.shape, jnp.float32).at[r_idx].add(g32 * qv)
+    return gq.astype(q_table.dtype), gr.astype(r_table.dtype), None
+
+
+qr_lookup.defvjp(_qr_fwd, _qr_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7))
+def tt_lookup(core0: jnp.ndarray, core1: jnp.ndarray, core2: jnp.ndarray,
+              idx: jnp.ndarray, offsets: Tuple[int, ...],
+              factors: Tuple[int, int, int], dim: int,
+              use_kernel: bool = False) -> jnp.ndarray:
+    """Fused tensor-train lookup.
+
+    core0 [n1, d1, r], core1 [n2, r, d2, r], core2 [n3, r, d3]; [B, F] int
+    rows (+ static per-field ``offsets``) decompose mixed-radix over
+    ``factors`` = (n1, n2, n3) in-path (in-kernel on the Pallas side) and
+    contract G1[i1]·G2[i2]·G3[i3] to [B, F, dim] without ever materializing
+    the table.
+    """
+    if use_kernel:
+        return tt_lookup_pallas(core0, core1, core2, idx, offsets, factors,
+                                dim, interpret=not _on_tpu())
+    return _ref.tt_lookup_ref(core0, core1, core2, idx, offsets, factors,
+                              dim)
+
+
+def _tt_fwd(core0, core1, core2, idx, offsets, factors, dim, use_kernel):
+    out = tt_lookup(core0, core1, core2, idx, offsets, factors, dim,
+                    use_kernel)
+    return out, (core0, core1, core2, idx)
+
+
+def _tt_bwd(offsets, factors, dim, use_kernel, res, g):
+    core0, core1, core2, idx = res
+    i1, i2, i3 = _ref.tt_indices(idx, offsets, factors)
+    d1, r = core0.shape[1:]
+    d2, d3 = core1.shape[2], core2.shape[2]
+    c1 = jnp.take(core0, i1, axis=0).astype(jnp.float32)  # [B, F, d1, r]
+    c2 = jnp.take(core1, i2, axis=0).astype(jnp.float32)  # [B, F, r, d2, r]
+    c3 = jnp.take(core2, i3, axis=0).astype(jnp.float32)  # [B, F, r, d3]
+    g32 = g.astype(jnp.float32).reshape(g.shape[:-1] + (d1, d2, d3))
+    # chain-rule through e = (c1·c2)·c3, then scatter-add each row's core
+    # grad into its core slice (f32 accumulate, core dtype delivery)
+    t = jnp.einsum("...ap,...pbq->...abq", c1, c2)
+    dc3 = jnp.einsum("...abq,...abc->...qc", t, g32)
+    dt = jnp.einsum("...abc,...qc->...abq", g32, c3)
+    dc1 = jnp.einsum("...abq,...pbq->...ap", dt, c2)
+    dc2 = jnp.einsum("...ap,...abq->...pbq", c1, dt)
+    g0 = jnp.zeros(core0.shape, jnp.float32).at[i1].add(dc1)
+    g1 = jnp.zeros(core1.shape, jnp.float32).at[i2].add(dc2)
+    g2 = jnp.zeros(core2.shape, jnp.float32).at[i3].add(dc3)
+    return (g0.astype(core0.dtype), g1.astype(core1.dtype),
+            g2.astype(core2.dtype), None)
+
+
+tt_lookup.defvjp(_tt_fwd, _tt_bwd)

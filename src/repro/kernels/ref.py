@@ -42,6 +42,69 @@ def cin_layer_ref(x0: jnp.ndarray, xk: jnp.ndarray, w: jnp.ndarray
     return jnp.einsum("bid,bjd,hij->bhd", x0, xk, w)
 
 
+def qr_indices(idx: jnp.ndarray, q_off, r_off, m: int):
+    """[B, F] ids -> (q_idx, r_idx) rows into the concatenated Q/R tables.
+
+    The ONE copy of the quotient/remainder decomposition the jnp forward
+    and the custom_vjp backward both use — forward/backward index math must
+    stay bit-identical or grads scatter into the wrong rows.  (The Pallas
+    kernel re-states it in-kernel; the conformance harness pins the two
+    together.)
+    """
+    q_idx = idx // m + jnp.asarray(q_off, idx.dtype)[None, :]
+    r_idx = idx % m + jnp.asarray(r_off, idx.dtype)[None, :]
+    return q_idx, r_idx
+
+
+def tt_indices(idx: jnp.ndarray, offsets, factors):
+    """[B, F] ids -> (i1, i2, i3) core rows, mixed-radix with i3 fastest.
+
+    Shared by the jnp forward and the custom_vjp backward (see
+    ``qr_indices`` on why there is exactly one copy outside the kernel).
+    """
+    _, n2, n3 = factors
+    g = idx + jnp.asarray(offsets, idx.dtype)[None, :]
+    i3 = g % n3
+    rest = g // n3
+    return rest // n2, rest % n2, i3
+
+
+def qr_lookup_ref(q_table: jnp.ndarray, r_table: jnp.ndarray,
+                  idx: jnp.ndarray, q_off, r_off, m: int) -> jnp.ndarray:
+    """Per-row QR path: ``Q[id // m + q_off[f]] * R[id % m + r_off[f]]``.
+
+    idx: [B, F] per-field row ids; q_off/r_off: per-field offsets into the
+    concatenated tables -> [B, F, dim].  The unfused oracle the fused
+    ``qr_lookup_pallas`` kernel is checked against (autodiff-able).
+    """
+    q_idx, r_idx = qr_indices(idx, q_off, r_off, m)
+    return jnp.take(q_table, q_idx, axis=0) * jnp.take(r_table, r_idx,
+                                                       axis=0)
+
+
+def tt_lookup_ref(core0: jnp.ndarray, core1: jnp.ndarray,
+                  core2: jnp.ndarray, idx: jnp.ndarray, offsets,
+                  factors, dim: int) -> jnp.ndarray:
+    """Per-row TT chain contraction with in-path index decomposition.
+
+    idx: [B, F] per-field row ids; offsets: per-field offsets into the
+    concatenated logical table; factors = (n1, n2, n3) its mixed-radix row
+    factorization (i3 fastest) -> [B, F, dim].  The unfused oracle the
+    fused ``tt_lookup_pallas`` kernel is checked against (autodiff-able).
+    """
+    i1, i2, i3 = tt_indices(idx, offsets, factors)
+    c1 = jnp.take(core0, i1, axis=0)                # [B, F, d1, r]
+    c2 = jnp.take(core1, i2, axis=0)                # [B, F, r, d2, r]
+    c3 = jnp.take(core2, i3, axis=0)                # [B, F, r, d3]
+    # f32 accumulation through the chain, core dtype on delivery — the
+    # same single-rounding contract as the fused kernel
+    t = jnp.einsum("...ap,...pbq->...abq", c1, c2,
+                   preferred_element_type=jnp.float32)
+    e = jnp.einsum("...abq,...qc->...abc", t, c3,
+                   preferred_element_type=jnp.float32)
+    return e.reshape(e.shape[:-3] + (dim,)).astype(core0.dtype)
+
+
 def qr_materialize_ref(q_table: jnp.ndarray, r_table: jnp.ndarray,
                        vocab_sizes, m: int) -> jnp.ndarray:
     """Materialize the full [total_rows, dim] table a QR (quotient ×

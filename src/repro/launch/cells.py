@@ -190,16 +190,19 @@ def _recsys_batch(cfg, batch: int, ctx, spec_axes):
 
 
 def build_recsys_cell(arch_id: str, shape_name: str, ctx,
-                      embedding: str = "robe") -> BuiltCell:
+                      embedding: str = "robe",
+                      use_kernel: bool = False) -> BuiltCell:
     from repro.models import recsys as R
     bundle = get_arch(arch_id)
     shape = bundle.shapes[shape_name]
-    cell_id = f"{arch_id}/{shape_name}[{embedding}]"
+    cell_id = f"{arch_id}/{shape_name}[{embedding}]" + \
+        ("[kernel]" if use_kernel else "")
     table_2d = embedding == "full2d"
     emb_kind = "full" if table_2d else embedding
     cfg = bundle.make_config("full", embedding=emb_kind,
                              full_table_shard="2d" if table_2d else "model",
-                             compute_dtype=jnp.bfloat16)
+                             compute_dtype=jnp.bfloat16,
+                             use_kernel=use_kernel)
     embedding = emb_kind
     emb_spec = cfg.embedding_spec()
     backend = get_backend(emb_spec.kind)

@@ -13,6 +13,12 @@ tables are concatenated across fields (like the ``full`` blob) and
 replicated — the substrate is small by construction, so lookups are local
 and batches shard over the whole mesh, same serving story as ROBE.
 
+Lookups go through the fused ``kernels/ops.qr_lookup`` op: with
+``spec.use_kernel`` the quotient/remainder index math, both VMEM-resident
+table gathers, and the product run in one Pallas pass
+(``kernels/qr_lookup.py``); otherwise the same math runs as the jnp
+reference path.
+
 ``m`` defaults to the power of two nearest √(max vocab), the
 memory-optimal split.
 """
@@ -77,10 +83,12 @@ class HashedBackend(EmbeddingBackend):
         fields = fields if fields is not None else tuple(range(spec.n_fields))
         m = _m(spec)
         _, q_off, r_off = qr_layout(spec.vocab_sizes, m)
-        qo = jnp.asarray(q_off[list(fields)], jnp.int32)
-        ro = jnp.asarray(r_off[list(fields)], jnp.int32)
-        return qr_lookup(params["q_table"], params["r_table"],
-                         idx // m + qo[None, :], idx % m + ro[None, :])
+        # static per-field offsets: the fused op computes the quotient /
+        # remainder indices in-path (in-kernel when spec.use_kernel)
+        qo = tuple(int(q_off[f]) for f in fields)
+        ro = tuple(int(r_off[f]) for f in fields)
+        return qr_lookup(params["q_table"], params["r_table"], idx,
+                         qo, ro, m, spec.use_kernel)
 
     def param_specs(self, spec, rules) -> dict:
         return {"q_table": P(), "r_table": P()}

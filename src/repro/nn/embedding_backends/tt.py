@@ -13,6 +13,12 @@ are never materialized, so the trained parameter count is
 O(n^(1/3) · d · r²) instead of O(n · d).  Cores are replicated (the
 substrate is small by construction): lookups are local gathers + two tiny
 einsums, batches shard over the whole mesh, same serving story as ROBE.
+
+Lookups go through the fused ``kernels/ops.tt_lookup`` op: with
+``spec.use_kernel`` the mixed-radix index decomposition, the three
+VMEM-resident core gathers, and the chain contraction run in one Pallas
+pass (``kernels/tt_lookup.py``); otherwise the same math runs as the jnp
+reference path.
 """
 
 from __future__ import annotations
@@ -83,13 +89,12 @@ class TensorTrainBackend(EmbeddingBackend):
     def lookup(self, params, spec, idx, fields=None):
         from repro.kernels.ops import tt_lookup
         fields = fields if fields is not None else tuple(range(spec.n_fields))
-        (n1, n2, n3), _, _ = self._dims(spec)
-        off = jnp.asarray(spec.offsets[list(fields)], jnp.int32)
-        g = idx + off[None, :]
-        i3 = g % n3
-        rest = g // n3
+        factors, _, _ = self._dims(spec)
+        # static per-field offsets: the fused op runs the mixed-radix index
+        # decomposition in-path (in-kernel when spec.use_kernel)
+        off = tuple(int(spec.offsets[f]) for f in fields)
         return tt_lookup(params["core0"], params["core1"], params["core2"],
-                         rest // n2, rest % n2, i3, spec.dim)
+                         idx, off, factors, spec.dim, spec.use_kernel)
 
     def param_specs(self, spec, rules) -> dict:
         return {"core0": P(), "core1": P(), "core2": P()}

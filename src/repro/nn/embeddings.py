@@ -57,7 +57,8 @@ class EmbeddingSpec:
     dim: int
     kind: str = "robe"                    # any registered backend name
     robe: Optional[RobeSpec] = None
-    use_kernel: bool = False              # Pallas path for the robe lookup
+    use_kernel: bool = False              # fused Pallas lookup path (robe /
+    #   hashed / tt kernels; interpret mode off-TPU)
     placement: str = "default"            # backend-interpreted layout knob:
     #   full: "default"/"model" row-shard | "2d" whole-mesh row-shard
     #   robe: "default" replicated | "model" ZeRO-3 sharded + all-gather

@@ -324,6 +324,17 @@ def test_recsys_cells_compile_every_backend():
                 ).lower(*cell.arg_shapes).compile()
             assert compiled is not None, emb
             print(emb, "ok")
+        # fused-kernel path (Pallas interpret off-TPU): the same cells must
+        # compile with every kernel-backed substrate's lookup fused
+        for emb in ("robe", "hashed", "tt"):
+            with dist.use(ctx):
+                cell = build_recsys_cell("dlrm-rm2", "serve_p99", ctx, emb,
+                                         use_kernel=True)
+                compiled = jax.jit(
+                    cell.fn, in_shardings=cell.in_shardings
+                ).lower(*cell.arg_shapes).compile()
+            assert compiled is not None, emb
+            print(emb, "kernel ok")
     """)
 
 

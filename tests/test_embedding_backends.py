@@ -17,6 +17,11 @@ from repro.nn.embeddings import (EmbeddingSpec, backend_names,
 VOCABS = (40, 24, 64)
 DIM = 8
 BACKENDS = ("full", "robe", "hashed", "tt")
+#: substrates with a fused Pallas lookup kernel — their parity/gradient
+#: cases run twice, kernel off (jnp path) and on (interpret mode)
+KERNEL_BACKENDS = ("robe", "hashed", "tt")
+KIND_KERNEL = [(k, False) for k in BACKENDS] + \
+    [(k, True) for k in KERNEL_BACKENDS]
 
 
 def _spec(kind: str, **kw) -> EmbeddingSpec:
@@ -59,9 +64,9 @@ def test_unknown_backend_raises_with_names():
         get_backend("no-such-substrate")
 
 
-@pytest.mark.parametrize("kind", BACKENDS)
-def test_lookup_matches_reference(kind):
-    spec = _spec(kind)
+@pytest.mark.parametrize("kind,use_kernel", KIND_KERNEL)
+def test_lookup_matches_reference(kind, use_kernel):
+    spec = _spec(kind, use_kernel=use_kernel)
     params = embedding_init(jax.random.PRNGKey(0), spec)
     rs = np.random.RandomState(1)
     idx = jnp.asarray(rs.randint(0, min(VOCABS), (16, 3)), jnp.int32)
@@ -74,9 +79,9 @@ def test_lookup_matches_reference(kind):
                                rtol=1e-5, atol=1e-6)
 
 
-@pytest.mark.parametrize("kind", BACKENDS)
-def test_grad_matches_reference(kind):
-    spec = _spec(kind)
+@pytest.mark.parametrize("kind,use_kernel", KIND_KERNEL)
+def test_grad_matches_reference(kind, use_kernel):
+    spec = _spec(kind, use_kernel=use_kernel)
     params = embedding_init(jax.random.PRNGKey(0), spec)
     rs = np.random.RandomState(2)
     idx = jnp.asarray(rs.randint(0, min(VOCABS), (8, 3)), jnp.int32)
@@ -93,6 +98,30 @@ def test_grad_matches_reference(kind):
     gr = jax.grad(loss_reference)(params)
     err = jax.tree.reduce(max, jax.tree.map(
         lambda a, b: float(jnp.max(jnp.abs(a - b))), gb, gr))
+    assert err < 1e-5, err
+
+
+@pytest.mark.parametrize("kind", KERNEL_BACKENDS)
+def test_kernel_path_tracks_jnp_path(kind):
+    """Fused (interpret) and jnp lookups must agree bit-for-bit-close in
+    forward AND gradient — the regression gate against drift between the
+    two paths."""
+    spec_j = _spec(kind)
+    spec_k = _spec(kind, use_kernel=True)
+    params = embedding_init(jax.random.PRNGKey(0), spec_j)
+    rs = np.random.RandomState(7)
+    idx = jnp.asarray(rs.randint(0, min(VOCABS), (16, 3)), jnp.int32)
+    ct = jnp.asarray(rs.randn(16, 3, DIM), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(embedding_lookup(params, spec_k, idx)),
+        np.asarray(embedding_lookup(params, spec_j, idx)),
+        rtol=1e-6, atol=1e-7)
+    gk = jax.grad(lambda p: (embedding_lookup(p, spec_k, idx) * ct).sum()
+                  )(params)
+    gj = jax.grad(lambda p: (embedding_lookup(p, spec_j, idx) * ct).sum()
+                  )(params)
+    err = jax.tree.reduce(max, jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a - b))), gk, gj))
     assert err < 1e-5, err
 
 
