@@ -37,6 +37,30 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 AxisRule = Union[None, str, Tuple[str, ...]]
 
 
+def axes_tuple(rule: AxisRule) -> tuple:
+    """Normalize a rules-table / spec-dim entry (None | str | tuple) to a
+    tuple of mesh-axis names.  Canonical home of the axis-normalization
+    rules — ``nn.embedding_backends.base`` and ``dist.param_specs``
+    re-export/consume these so spec trees built anywhere agree."""
+    if rule is None:
+        return ()
+    return (rule,) if isinstance(rule, str) else tuple(rule)
+
+
+def axes_entry(axes: tuple):
+    """One PartitionSpec dimension entry from a mesh-axes tuple."""
+    return axes[0] if len(axes) == 1 else axes
+
+
+def axes_on_mesh(axes: tuple, mesh) -> tuple:
+    """Keep only the axes a concrete mesh still carries (``mesh=None`` is
+    the no-op production path) — layouts re-resolve through this when
+    restoring onto a degraded mesh."""
+    if mesh is None:
+        return axes
+    return tuple(a for a in axes if a in mesh.axis_names)
+
+
 def default_rules(multi_pod: bool = False) -> Dict[str, AxisRule]:
     """Logical-axis → mesh-axis table for the production meshes."""
     dp: AxisRule = ("pod", "data") if multi_pod else "data"
@@ -106,6 +130,61 @@ def use(ctx: DistContext):
         yield ctx
     finally:
         _STACK.ctxs.pop()
+
+
+def swap(ctx: DistContext) -> DistContext:
+    """Replace the innermost active context in place; returns the old one.
+
+    The elastic re-slice path (``repro.train.elastic``): a degraded mesh
+    must become current *mid-run*, inside the caller's ``use`` block, so
+    every subsequent trace (shard constraints, backend shard_map bodies)
+    resolves against the surviving devices.  The enclosing ``use`` still
+    pops cleanly on exit.
+    """
+    if not _STACK.ctxs:
+        raise RuntimeError("dist.swap: no active DistContext to replace")
+    old = _STACK.ctxs[-1]
+    _STACK.ctxs[-1] = ctx
+    return old
+
+
+def named_shardings(ctx: DistContext, spec_tree):
+    """NamedShardings on ``ctx.mesh`` for a PartitionSpec pytree."""
+    return jax.tree.map(lambda s: NamedSharding(ctx.mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def prune_specs(spec_tree, shapes, mesh):
+    """Re-resolve a PartitionSpec tree against a (possibly degraded) mesh.
+
+    For each spec dimension, drop mesh axes the new mesh no longer has and
+    fall back to replicated when the leaf's dim no longer divides the
+    mapped axes' total — the spec-tree half of elastic resume: a layout
+    that was legal on the old mesh must stay legal on the survivors.
+    ``shapes`` is any pytree of arrays / ShapeDtypeStructs congruent with
+    ``spec_tree``.
+    """
+    def one(spec, leaf):
+        if not isinstance(spec, P):
+            return spec
+        dims = list(spec) + [None] * (leaf.ndim - len(spec))
+        out = []
+        for i, entry in enumerate(dims):
+            if entry is None:
+                out.append(None)
+                continue
+            axes = axes_on_mesh(axes_tuple(entry), mesh)
+            n = 1
+            for a in axes:
+                n *= mesh.shape[a]
+            if not axes or n == 0 or leaf.shape[i] % n != 0:
+                out.append(None)
+            else:
+                out.append(axes_entry(axes))
+        return P(*out)
+
+    return jax.tree.map(one, spec_tree, shapes,
+                        is_leaf=lambda x: isinstance(x, P))
 
 
 def resolve_spec(ctx: DistContext, logical_axes: Sequence[Optional[str]],

@@ -35,6 +35,10 @@ import jax
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+# the canonical axis-normalization helpers (shared with the backends'
+# spec trees and prune_specs)
+from repro.dist.api import axes_entry as _entry, axes_tuple as _axes_tuple
+
 # dense_init sublayers inside attention blocks, classified Megatron-style
 _COL_W = {"wq", "wk", "wv", "w_uq", "w_uk", "w_uv"}
 _ROW_W = {"wo"}
@@ -42,16 +46,6 @@ _ROW_W = {"wo"}
 
 def _keys(path) -> list:
     return [str(getattr(p, "key", getattr(p, "idx", ""))) for p in path]
-
-
-def _axes_tuple(rule) -> tuple:
-    if rule is None:
-        return ()
-    return (rule,) if isinstance(rule, str) else tuple(rule)
-
-
-def _entry(axes: tuple):
-    return axes[0] if len(axes) == 1 else axes
 
 
 def _is_spec(x) -> bool:
@@ -64,11 +58,13 @@ def replicated_specs(pshapes) -> Any:
 
 
 def recsys_specs(pshapes, rules: Dict, embedding_spec=None, *,
-                 table_2d: bool = False) -> Any:
+                 table_2d: bool = False, mesh=None) -> Any:
     """Dense towers replicated; the ``embedding`` subtree delegated to
     ``get_backend(embedding_spec.kind).param_specs`` (each substrate owns
     its layout).  ``table_2d`` forces the full table's whole-mesh placement
-    for callers that don't thread it through the spec."""
+    for callers that don't thread it through the spec.  ``mesh`` re-resolves
+    the backend's layout against a concrete (possibly degraded) mesh —
+    the elastic-resume path."""
     import dataclasses as _dc
 
     from repro.nn.embedding_backends import get_backend
@@ -86,7 +82,8 @@ def recsys_specs(pshapes, rules: Dict, embedding_spec=None, *,
         if table_2d and spec.placement != "2d":
             spec = _dc.replace(spec, placement="2d")
         out = dict(out)
-        out["embedding"] = get_backend(spec.kind).param_specs(spec, rules)
+        out["embedding"] = get_backend(spec.kind).param_specs(spec, rules,
+                                                              mesh=mesh)
     return out
 
 

@@ -21,7 +21,7 @@ from typing import Any, Callable, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_arch
 from repro.dist import api as dist
@@ -45,8 +45,7 @@ class BuiltCell:
 
 
 def _shardify(ctx, spec_tree):
-    return jax.tree.map(lambda s: NamedSharding(ctx.mesh, s), spec_tree,
-                        is_leaf=lambda x: isinstance(x, P))
+    return dist.named_shardings(ctx, spec_tree)
 
 
 def _dp(ctx):

@@ -6,6 +6,8 @@ touches jax device state.
 
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 
 
@@ -20,3 +22,35 @@ def make_context(*, multi_pod: bool = False):
     mesh = make_production_mesh(multi_pod=multi_pod)
     return DistContext(mesh=mesh, rules=default_rules(multi_pod),
                        multi_pod=multi_pod)
+
+
+def degrade_mesh(mesh, axis: str = "model", keep: Optional[int] = None):
+    """The surviving sub-mesh after hardware drops out of ``axis``.
+
+    Keeps the first ``keep`` slices (default: half) along ``axis`` and
+    rebuilds a mesh of the same axis names from the remaining devices —
+    dropping a slow pod is ``degrade_mesh(mesh, "pod", keep=1)``, shrinking
+    the model axis is the default.  Axis names never change, so every
+    PartitionSpec that was legal on the old mesh re-resolves against this
+    one (``repro.dist.api.prune_specs`` handles divisibility fallbacks).
+    """
+    import numpy as np
+    names = mesh.axis_names
+    if axis not in names:
+        raise ValueError(f"mesh has no axis {axis!r}: {names}")
+    n = mesh.shape[axis]
+    keep = n // 2 if keep is None else keep
+    if not 1 <= keep < n:
+        raise ValueError(f"keep={keep} must be in [1, {n}) for axis "
+                         f"{axis!r} of size {n}")
+    devs = np.asarray(mesh.devices)
+    sl = [slice(None)] * devs.ndim
+    sl[names.index(axis)] = slice(0, keep)
+    return jax.sharding.Mesh(devs[tuple(sl)], names)
+
+
+def degrade_context(ctx, axis: str = "model", keep: Optional[int] = None):
+    """A ``DistContext`` on the degraded mesh, same rules — the default
+    ``degrade`` hook for ``repro.train.elastic.ResliceController``."""
+    import dataclasses
+    return dataclasses.replace(ctx, mesh=degrade_mesh(ctx.mesh, axis, keep))

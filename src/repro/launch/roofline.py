@@ -97,11 +97,17 @@ def run_probe(arch_id: str, shape_name: str, n_layers: int,
 
 
 def corrected_terms(arch_id: str, shape_name: str,
-                    embedding: str = "default") -> Optional[dict]:
-    """Roofline terms with the scan-body correction where applicable."""
+                    embedding: str = "default",
+                    mesh: str = "single") -> Optional[dict]:
+    """Roofline terms with the scan-body correction where applicable.
+
+    ``mesh`` selects which dry-run artifact set to read ("single" or
+    "multi" — the committed 2×16×16 sweep); the scan-body probe correction
+    compiles single-pod probes, so it only applies to mesh="single".
+    """
     from repro.configs import get_arch
     bundle = get_arch(arch_id)
-    key = f"{arch_id}__{shape_name}__single__{embedding}".replace("/", "_")
+    key = f"{arch_id}__{shape_name}__{mesh}__{embedding}".replace("/", "_")
     full = _load(key)
     if full is None or not full.get("ok") or full.get("skipped"):
         return None
@@ -124,7 +130,7 @@ def corrected_terms(arch_id: str, shape_name: str,
         emb_cost = get_backend(spec.kind).cost(spec, b)
 
     corr = None
-    if bundle.kind == "lm":
+    if bundle.kind == "lm" and mesh == "single":
         cfg = bundle.make_config("full")
         fk = cfg.first_k_dense
         k = fk + 2

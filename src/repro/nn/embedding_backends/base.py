@@ -14,8 +14,10 @@ a substrate hangs off the backend object:
 * ``lookup_dist(params, spec, idx)``    -> the distributed lookup under the
   active ``repro.dist`` context (shard_map bodies live in the backend, not
   in the model)
-* ``param_specs(spec, rules)``          -> PartitionSpec tree for the
-  parameter pytree (consumed by ``repro.dist.param_specs.recsys_specs``)
+* ``param_specs(spec, rules, mesh=None)`` -> PartitionSpec tree for the
+  parameter pytree (consumed by ``repro.dist.param_specs.recsys_specs``);
+  ``mesh`` re-resolves the layout against a concrete — possibly degraded —
+  mesh (the elastic re-slice contract, see ``repro.train.elastic``)
 * ``cost(spec, batch)``                 -> {"params", "bytes_fetched",
   "flops"} — the roofline/benchmark cost model, owned by the substrate
 * ``local_batch``                       — True when lookups need no
@@ -35,16 +37,11 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 
-def axes_tuple(rule) -> tuple:
-    """Normalize a rules-table entry (None | str | tuple) to a tuple."""
-    if rule is None:
-        return ()
-    return (rule,) if isinstance(rule, str) else tuple(rule)
-
-
-def axes_entry(axes: tuple):
-    """One PartitionSpec dimension entry from a mesh-axes tuple."""
-    return axes[0] if len(axes) == 1 else axes
+# canonical axis-normalization helpers live in dist.api (the spec trees
+# backends build must agree with the ones prune_specs re-resolves);
+# re-exported here because every backend module imports them from base
+from repro.dist.api import (axes_entry, axes_on_mesh,      # noqa: F401
+                            axes_tuple)
 
 
 class EmbeddingBackend:
@@ -121,8 +118,15 @@ class EmbeddingBackend:
 
     # -- metadata ----------------------------------------------------------
 
-    def param_specs(self, spec, rules: Dict) -> dict:
-        """PartitionSpec tree matching ``init``'s parameter pytree."""
+    def param_specs(self, spec, rules: Dict, mesh=None) -> dict:
+        """PartitionSpec tree matching ``init``'s parameter pytree.
+
+        ``mesh`` (optional): re-resolve the layout against a concrete —
+        possibly degraded — mesh instead of the production one the rules
+        were written for: axes the mesh no longer carries are dropped
+        (elastic re-slice, ``repro.train.elastic``).  Shape divisibility
+        on the survivors is the caller's job (``dist.api.prune_specs``).
+        """
         raise NotImplementedError
 
     def param_count(self, spec) -> int:

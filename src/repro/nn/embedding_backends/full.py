@@ -22,7 +22,8 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.nn.embedding_backends.base import (EmbeddingBackend, axes_entry,
-                                              axes_tuple, register_backend)
+                                              axes_on_mesh, axes_tuple,
+                                              register_backend)
 
 
 def full_lookup_sharded_body(table_shard: jnp.ndarray, idx: jnp.ndarray,
@@ -134,10 +135,13 @@ class FullTableBackend(EmbeddingBackend):
 
         return self.lookup(params, spec, idx)
 
-    def param_specs(self, spec, rules) -> dict:
+    def param_specs(self, spec, rules, mesh=None) -> dict:
         dp = axes_tuple(rules.get("batch"))
         rows = axes_tuple(rules.get("table_rows", "model"))
         table_axes = dp + rows if spec.placement == "2d" else rows
+        table_axes = axes_on_mesh(table_axes, mesh)   # elastic: survivors
+        if not table_axes:
+            return {"table": P()}
         return {"table": P(axes_entry(table_axes), None)}
 
     def param_count(self, spec) -> int:

@@ -90,7 +90,9 @@ class HashedBackend(EmbeddingBackend):
         return qr_lookup(params["q_table"], params["r_table"], idx,
                          qo, ro, m, spec.use_kernel)
 
-    def param_specs(self, spec, rules) -> dict:
+    def param_specs(self, spec, rules, mesh=None) -> dict:
+        # replicated on every mesh: a degraded mesh changes nothing, the
+        # elastic restore just re-broadcasts both tables to the survivors
         return {"q_table": P(), "r_table": P()}
 
     def param_count(self, spec) -> int:

@@ -24,7 +24,8 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.robe import init_memory
 from repro.nn.embedding_backends.base import (EmbeddingBackend, axes_entry,
-                                              axes_tuple, register_backend)
+                                              axes_on_mesh, axes_tuple,
+                                              register_backend)
 
 
 def robe_allgather_body(mem_shard: jnp.ndarray, model_axis: str
@@ -94,10 +95,15 @@ class RobeBackend(EmbeddingBackend):
             in_specs=(P("model"), P(every, None)),
             out_specs=P(every, None, None))(mem, idx)
 
-    def param_specs(self, spec, rules) -> dict:
+    def param_specs(self, spec, rules, mesh=None) -> dict:
         if spec.placement == "model":
-            rows = axes_tuple(rules.get("table_rows", "model"))
-            return {"memory": P(axes_entry(rows))}
+            # ZeRO-3: on a degraded mesh the array re-shards over the
+            # surviving model axis (the per-step gather simply spans
+            # fewer shards); no surviving axis → back to replicated
+            rows = axes_on_mesh(axes_tuple(rules.get("table_rows", "model")),
+                                mesh)
+            if rows:
+                return {"memory": P(axes_entry(rows))}
         return {"memory": P()}
 
     def param_count(self, spec) -> int:

@@ -96,7 +96,9 @@ class TensorTrainBackend(EmbeddingBackend):
         return tt_lookup(params["core0"], params["core1"], params["core2"],
                          idx, off, factors, spec.dim, spec.use_kernel)
 
-    def param_specs(self, spec, rules) -> dict:
+    def param_specs(self, spec, rules, mesh=None) -> dict:
+        # replicated on every mesh: a degraded mesh changes nothing, the
+        # elastic restore just re-broadcasts the cores to the survivors
         return {"core0": P(), "core1": P(), "core2": P()}
 
     def param_count(self, spec) -> int:

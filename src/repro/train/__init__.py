@@ -1,2 +1,2 @@
 """Training substrate: optimizers, train loop, checkpointing, metrics,
-gradient compression."""
+gradient compression, elastic re-slice (``repro.train.elastic``)."""

@@ -104,6 +104,11 @@ def _gc(ckpt_dir: str, keep_last: int) -> None:
     steps = sorted(d for d in os.listdir(ckpt_dir) if d.startswith("step-"))
     for d in steps[:-keep_last] if keep_last else []:
         shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
+    # stale tmp-* dirs are crashed half-writes (killed between tmp-write
+    # and rename); saves are serialized, so anything here is dead weight
+    for d in os.listdir(ckpt_dir):
+        if d.startswith("tmp-"):
+            shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
 
 
 def _verify_and_load(path: str, template) -> Tuple[Any, dict]:
@@ -121,17 +126,24 @@ def _verify_and_load(path: str, template) -> Tuple[Any, dict]:
     return tree, manifest
 
 
-def restore_latest(ckpt_dir: str, template,
-                   shardings=None) -> Optional[Tuple[Any, dict]]:
+def restore_latest(ckpt_dir: str, template, shardings=None,
+                   step: Optional[int] = None) -> Optional[Tuple[Any, dict]]:
     """Restore the newest valid checkpoint (skipping corrupted ones).
 
     ``shardings``: optional pytree of NamedSharding for elastic resume onto a
     (possibly different) mesh — arrays are device_put with the new sharding.
+    Individual leaves may be None (skip the device_put, default placement),
+    so a live state's own ``.sharding`` tree works even when some leaves
+    are host numpy.
+    ``step``: pin a specific snapshot instead of the newest (replaying a
+    re-slice for a clean-run comparison, bisecting a bad restore, …).
     """
     if not os.path.isdir(ckpt_dir):
         return None
     steps = sorted((d for d in os.listdir(ckpt_dir)
                     if d.startswith("step-")), reverse=True)
+    if step is not None:
+        steps = [d for d in steps if d == f"step-{step:010d}"]
     for d in steps:
         path = os.path.join(ckpt_dir, d)
         try:
@@ -139,6 +151,36 @@ def restore_latest(ckpt_dir: str, template,
         except BaseException:
             continue                         # corrupted → try previous
         if shardings is not None:
-            tree = jax.tree.map(jax.device_put, tree, shardings)
+            # None is an (empty) pytree node, so flatten the shardings
+            # with None-as-leaf and zip instead of a two-tree map
+            flat, treedef = jax.tree.flatten(tree)
+            flat_sh = jax.tree.leaves(shardings,
+                                      is_leaf=lambda s: s is None)
+            if len(flat_sh) != len(flat):
+                raise ValueError(
+                    f"shardings tree has {len(flat_sh)} leaves, state has "
+                    f"{len(flat)} — a non-congruent spec tree would zip "
+                    "shardings onto the wrong arrays")
+            tree = treedef.unflatten(
+                [x if s is None else jax.device_put(x, s)
+                 for x, s in zip(flat, flat_sh)])
         return tree, manifest
     return None
+
+
+def restore_onto(ckpt_dir: str, template, ctx, spec_tree,
+                 step: Optional[int] = None) -> Optional[Tuple[Any, dict]]:
+    """Elastic resume: restore the newest checkpoint onto ``ctx``'s mesh.
+
+    ``spec_tree`` is the PartitionSpec pytree for ``template`` (as built
+    against the NEW context's rules).  The specs are first re-resolved
+    against the concrete mesh — axes the degraded mesh no longer carries
+    or no longer divides fall back to replicated — then every array is
+    device_put with the resulting NamedShardings.  This is the loader half
+    of the manifest's "restores onto ANY mesh" contract.
+    """
+    from repro.dist import api as dist
+    specs = dist.prune_specs(spec_tree, template, ctx.mesh)
+    return restore_latest(ckpt_dir, template,
+                          shardings=dist.named_shardings(ctx, specs),
+                          step=step)

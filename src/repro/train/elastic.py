@@ -1,0 +1,238 @@
+"""Elastic re-slice: turn the straggler flag into a real mesh rebuild.
+
+The paper's operational claim is that a 1000×-compressed embedding makes
+the whole DLRM cheap enough to *re-shard in seconds* when hardware
+degrades — the state is ~100MB, not 100GB, so dropping a slow pod mid-run
+costs one checkpoint restore.  This module is that code path:
+
+* ``ResliceController`` — the injectable ``reslice_fn`` consumed by
+  ``train_loop.run``.  When the straggler monitor trips, the controller
+  (1) builds a degraded ``DistContext`` (drop the slow pod / shrink the
+  ``model`` axis — ``launch.mesh.degrade_context`` is the default),
+  (2) swaps it in via ``dist.api.swap`` so every subsequent trace sees the
+  survivors, (3) re-resolves the state's PartitionSpec tree against the
+  new mesh (each embedding backend's ``param_specs(..., mesh=)`` +
+  ``dist.api.prune_specs`` divisibility fallbacks), (4) restores the last
+  atomic checkpoint onto the new shardings (``checkpoint.restore_onto``),
+  and (5) re-jits the step via the caller's ``build_step`` hook.  Training
+  then continues counting the same global step.
+
+* ``FaultPlan`` / ``FaultClock`` — the deterministic fault-injection
+  harness driving ``tests/test_elastic.py`` (and usable for gameday drills
+  against a live loop): inject slow steps, NaN batches, and raised
+  exceptions at chosen *global* steps, with step time advanced on a
+  synthetic monotonic clock so the straggler EWMA is reproducible down to
+  the float.
+
+Re-slice contract every embedding backend must satisfy (see ROADMAP
+"Elastic training"): ``param_specs(spec, rules, mesh=degraded)`` must
+return a layout that is legal on the survivors — replicated substrates
+(robe default, hashed, tt) return the same tree; sharded placements
+(full rows over ``model``/the whole mesh, ZeRO-3 robe) re-shard over the
+surviving axes and fall back to replicated when an axis disappears.
+Divisibility against the checkpointed shapes is then enforced centrally
+by ``dist.api.prune_specs``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Set
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.dist import api as dist
+from repro.train import checkpoint as ckpt_lib
+
+__all__ = ["FaultClock", "FaultPlan", "ResliceEvent", "ResliceController",
+           "train_state_specs"]
+
+
+# ---------------------------------------------------------------------------
+# deterministic fault injection
+# ---------------------------------------------------------------------------
+
+class FaultClock:
+    """A monotonic clock that advances only when told.
+
+    Passed as ``run(..., timer=plan.clock)`` so step durations — and
+    therefore the straggler EWMA — come from the plan, not the wall."""
+
+    def __init__(self, t0: float = 0.0):
+        self._t = float(t0)
+
+    def __call__(self) -> float:
+        return self._t
+
+    def advance(self, dt: float) -> None:
+        self._t += float(dt)
+
+
+@dataclasses.dataclass
+class FaultPlan:
+    """Deterministic fault injection for ``train_loop.run``.
+
+    Faults fire at *global* steps (the value of ``state["step"]`` /
+    ``batch_at``'s argument), so a plan composes with checkpoint resume:
+
+    * ``slow_steps``  — step → synthetic seconds; every other step takes
+      ``base_dt``.  Wrap the step fn AND pass ``timer=plan.clock``.
+    * ``nan_steps``   — steps whose batches get every float leaf poisoned
+      to NaN (the loss goes NaN; the loop must restore + skip).  Wrap
+      ``batch_at``; poisoning is pure per step, as resume requires.
+    * ``raise_steps`` — step → message; the wrapped step fn raises
+      RuntimeError ONCE per step (like a node failure: the retry after
+      restart succeeds).
+
+    Caveat: ``slow``/``raise`` key off ``state["step"]`` while ``nan``
+    keys off ``batch_at``'s argument; the two agree except in the window
+    after a NaN restore (the loop skips the poisoned batch forward while
+    the restored state rewinds — train_loop's long-standing skip-don't-
+    rewind semantics), so don't plan overlapping faults inside it.
+    """
+
+    slow_steps: Dict[int, float] = dataclasses.field(default_factory=dict)
+    nan_steps: Set[int] = dataclasses.field(default_factory=set)
+    raise_steps: Dict[int, str] = dataclasses.field(default_factory=dict)
+    base_dt: float = 0.01
+    clock: FaultClock = dataclasses.field(default_factory=FaultClock)
+    _raised: Set[int] = dataclasses.field(default_factory=set, init=False)
+
+    def wrap_step_fn(self, step_fn: Callable) -> Callable:
+        """Raise at ``raise_steps`` (once each) and advance the fault
+        clock by the planned duration of every executed step."""
+
+        def wrapped(state, batch):
+            step = int(jax.device_get(state["step"]))
+            if step in self.raise_steps and step not in self._raised:
+                self._raised.add(step)
+                raise RuntimeError(self.raise_steps[step])
+            out = step_fn(state, batch)
+            self.clock.advance(self.slow_steps.get(step, self.base_dt))
+            return out
+
+        return wrapped
+
+    def wrap_batch_at(self, batch_at: Callable[[int], dict]
+                      ) -> Callable[[int], dict]:
+        """Poison every float leaf of the batch to NaN at ``nan_steps``."""
+
+        def poison(v):
+            v = np.asarray(v)
+            if np.issubdtype(v.dtype, np.floating):
+                return np.full_like(v, np.nan)
+            return v
+
+        def wrapped(step: int) -> dict:
+            batch = batch_at(step)
+            if step in self.nan_steps:
+                batch = {k: poison(v) for k, v in batch.items()}
+            return batch
+
+        return wrapped
+
+
+# ---------------------------------------------------------------------------
+# the re-slice controller
+# ---------------------------------------------------------------------------
+
+def train_state_specs(state: dict, pspecs, rules=None) -> dict:
+    """PartitionSpec tree for a ``train_loop.init_state`` dict.
+
+    ``params`` takes ``pspecs``; ``opt`` mirrors it leaf-for-leaf
+    (``dist.param_specs.state_specs``); the error-feedback residuals
+    (``ef``, grad compression) carry a leading per-DP-shard axis and live
+    sharded over the data axes — replicating those model-sized fp32
+    buffers onto a just-degraded mesh would inflate memory exactly when
+    capacity dropped, so pass ``rules`` to keep them on ``batch``.
+    Everything else (``step``, scalar bookkeeping) replicates.
+    """
+    from repro.dist.param_specs import state_specs
+    dp = rules.get("batch") if rules else None
+    out = {}
+    for k, sub in state.items():
+        if k == "params":
+            out[k] = pspecs
+        elif k == "opt":
+            out[k] = state_specs(pspecs, sub)
+        elif k == "ef" and dp is not None:
+            out[k] = jax.tree.map(lambda _: P(dp), sub)
+        else:
+            out[k] = jax.tree.map(lambda _: P(), sub)
+    return out
+
+
+@dataclasses.dataclass
+class ResliceEvent:
+    step: int                 # global step the rebuild happened at
+    devices_before: int
+    devices_after: int
+    restored_step: Optional[int]   # manifest step, None = live re-place
+
+
+class ResliceController:
+    """Injectable ``reslice_fn`` for ``train_loop.run``.
+
+    Hooks (all called with the NEW/old context as documented):
+
+    * ``degrade(old_ctx) -> DistContext`` — build the surviving mesh.
+      Default: halve the ``model`` axis (``launch.mesh.degrade_context``).
+    * ``state_specs(new_ctx, state) -> spec tree`` — PartitionSpecs for
+      the full train-state dict under the new context's rules (e.g.
+      ``train_state_specs(state, recsys_specs(..., mesh=new_ctx.mesh),
+      new_ctx.rules)``).
+    * ``build_step(new_ctx) -> step_fn`` — re-jit the train step; traced
+      lazily on first call, under the already-swapped context.
+
+    The controller appends a ``ResliceEvent`` per rebuild to ``events``.
+    """
+
+    def __init__(self, *, state_specs: Callable[[Any, dict], Any],
+                 build_step: Callable[[Any], Callable],
+                 ckpt_dir: Optional[str] = None,
+                 degrade: Optional[Callable[[Any], Any]] = None):
+        if degrade is None:
+            from repro.launch.mesh import degrade_context
+            degrade = degrade_context
+        self.degrade = degrade
+        self.state_specs = state_specs
+        self.build_step = build_step
+        self.ckpt_dir = ckpt_dir
+        self.events: List[ResliceEvent] = []
+
+    def __call__(self, state: dict, step: int):
+        old_ctx = dist.current()
+        if old_ctx is None:
+            raise RuntimeError("reslice needs an active DistContext "
+                               "(run inside `with dist.use(ctx):`)")
+        new_ctx = self.degrade(old_ctx)
+        specs = self.state_specs(new_ctx, state)
+        restored_step = None
+        restored = None
+        if self.ckpt_dir is not None:
+            # pin the snapshot the loop just flushed: a stale dir (e.g.
+            # run() given a different ckpt_dir) must NOT silently rewind
+            # training to whatever happens to be newest — no match falls
+            # through to the safe live re-place below
+            restored = ckpt_lib.restore_onto(self.ckpt_dir, state, new_ctx,
+                                             specs, step=step)
+        if restored is not None:
+            state, manifest = restored
+            restored_step = int(manifest["step"])
+        else:
+            # no checkpoint yet: re-place the live state onto the new mesh
+            specs = dist.prune_specs(specs, state, new_ctx.mesh)
+            state = jax.tree.map(jax.device_put, state,
+                                 dist.named_shardings(new_ctx, specs))
+        step_fn = self.build_step(new_ctx)
+        # swap LAST, once nothing can fail: if degrade/restore/build raise,
+        # run() catches it as a restart and the healthy context stays
+        # active.  step_fn traces lazily, so its first call sees the
+        # survivors.
+        dist.swap(new_ctx)
+        self.events.append(ResliceEvent(
+            step=step, devices_before=old_ctx.n_devices,
+            devices_after=new_ctx.n_devices, restored_step=restored_step))
+        return state, step_fn

@@ -10,6 +10,11 @@ DP-compression method is selected — per-shard grads reduced through
 ``run`` is the production loop: checkpoint every k steps (async, atomic),
 auto-resume (incl. onto a different mesh = elastic), NaN → restore + skip
 batch, straggler monitor (step-time EWMA), bounded restarts on exceptions.
+When ``reslice_fn`` is given, ``straggler_patience`` consecutive flagged
+steps trigger an elastic re-slice: the loop flushes a checkpoint, hands
+control to ``reslice_fn(state, step)`` (``repro.train.elastic`` builds the
+degraded mesh, re-resolves the sharding specs, restores onto it, re-jits),
+and continues at the same global step on the surviving devices.
 """
 
 from __future__ import annotations
@@ -37,6 +42,10 @@ class TrainConfig:
     log_every: int = 10
     grad_compression: str = "none"       # none | bf16 | int8
     straggler_factor: float = 3.0        # step > f × EWMA ⇒ flagged
+    straggler_patience: int = 3          # consecutive flags ⇒ re-slice
+    #   (only with a reslice_fn; the EWMA skips warm-up steps — first step
+    #   after a (re)compile/restore and the step after a checkpoint save —
+    #   so compile and ckpt I/O never masquerade as stragglers)
 
 
 def build_train_step(loss_fn: Callable, optimizer: Optimizer,
@@ -123,6 +132,17 @@ def init_state(params, optimizer: Optimizer, cfg: TrainConfig) -> dict:
     return state
 
 
+def _live_shardings(state):
+    """The state's own resident shardings, for restoring a checkpoint back
+    onto the CURRENT layout — after an elastic re-slice the mesh mid-run is
+    the degraded one, and a NaN/exception restore must not replicate a
+    model-sharded table onto every survivor.  Leaves without a sharding
+    (host numpy from an earlier restore) map to None = default placement.
+    """
+    return jax.tree.map(
+        lambda x: getattr(x, "sharding", None), state)
+
+
 @dataclasses.dataclass
 class RunReport:
     steps_done: int
@@ -132,24 +152,40 @@ class RunReport:
     straggler_steps: int
     losses: list
     state: dict = None       # final train state (donation-safe handle)
+    reslices: int = 0        # elastic mesh rebuilds (reslice_fn calls)
 
 
 def run(state, step_fn: Callable, batch_at: Callable[[int], dict],
         n_steps: int, cfg: TrainConfig,
         ckpt_dir: Optional[str] = None,
-        inject_fault_at: Optional[int] = None) -> RunReport:
+        inject_fault_at: Optional[int] = None,
+        reslice_fn: Optional[Callable] = None,
+        timer: Callable[[], float] = time.monotonic) -> RunReport:
     """Fault-tolerant training loop (single-controller).
 
     ``batch_at(step)`` must be a pure function of step (resume correctness).
     ``inject_fault_at``: raise a simulated node failure at that step once
-    (test hook used by tests/test_fault.py).
+    (legacy test hook; ``repro.train.elastic.FaultPlan`` is the general
+    harness).
+    ``reslice_fn(state, step) -> (state, step_fn)``: elastic re-slice hook,
+    called after ``cfg.straggler_patience`` consecutive straggler-flagged
+    steps with a just-flushed checkpoint on disk — it must hand back state
+    and a step function resident on the rebuilt (degraded) mesh; the loop
+    resumes counting the same global step.  ``None`` (default) keeps the
+    monitor passive: stragglers are only counted.
+    ``timer``: monotonic clock used for step timing — injectable so fault
+    drills (``FaultPlan``) drive the straggler EWMA deterministically.
     """
     saver = ckpt_lib.AsyncCheckpointer(ckpt_dir, cfg.keep_last) \
         if ckpt_dir else None
     restarts = 0
     nan_events = 0
     straggler_steps = 0
+    straggler_run = 0        # consecutive flags since the last quiet step
+    reslices = 0
     ewma = None
+    warmup = True            # next measured dt is compile / restore / ckpt
+    #   I/O — excluded from both the EWMA and the straggler flag
     losses: list = []
     injected = {"done": False}
 
@@ -167,26 +203,64 @@ def run(state, step_fn: Callable, batch_at: Callable[[int], dict],
                     and not injected["done"]:
                 injected["done"] = True
                 raise RuntimeError("injected node failure")
-            t0 = time.monotonic()
+            t0 = timer()
             batch = {k: jnp.asarray(v) for k, v in batch_at(step).items()}
             state, metrics = step_fn(state, batch)
             loss = float(jax.device_get(metrics["loss"]))
-            dt = time.monotonic() - t0
-            ewma = dt if ewma is None else 0.9 * ewma + 0.1 * dt
-            if dt > cfg.straggler_factor * ewma and step > start + 3:
-                straggler_steps += 1    # real pods: trigger re-slice here
+            dt = timer() - t0
+            if warmup:
+                warmup = False
+            else:
+                if ewma is not None and dt > cfg.straggler_factor * ewma:
+                    straggler_steps += 1
+                    straggler_run += 1
+                else:
+                    straggler_run = 0
+                ewma = dt if ewma is None else 0.9 * ewma + 0.1 * dt
+            saved_this_step = False
             if not np.isfinite(loss):
                 nan_events += 1
                 if ckpt_dir:
-                    restored = ckpt_lib.restore_latest(ckpt_dir, state)
+                    if saver:
+                        saver.wait()    # never race the in-flight write
+                    restored = ckpt_lib.restore_latest(
+                        ckpt_dir, state, shardings=_live_shardings(state))
                     if restored is not None:
                         state, manifest = restored
-                step += 1               # skip the poisoned batch
-                continue
-            losses.append(loss)
-            step += 1
-            if saver and step % cfg.checkpoint_every == 0:
-                saver.save(step, state)
+                warmup = True           # restore I/O pollutes the next dt
+                step += 1               # skip the poisoned batch; fall
+                #   through: a pending re-slice must still fire (slow AND
+                #   corrupting hardware is one failure, not two)
+            else:
+                losses.append(loss)
+                step += 1
+                if saver and step % cfg.checkpoint_every == 0:
+                    saver.save(step, state)
+                    saved_this_step = True
+                    warmup = True           # ckpt I/O pollutes the next dt
+            if reslice_fn is not None \
+                    and straggler_run >= cfg.straggler_patience:
+                # reset the monitor FIRST: if the rebuild itself fails
+                # (caught below as a restart) it must take another
+                # `patience` flagged steps to re-trigger, not retry on
+                # every following step
+                straggler_run = 0
+                ewma = None             # new hardware, new step-time prior
+                warmup = True
+                # flush the current state so the rebuild restores exactly
+                # this global step onto the degraded mesh (skip only when
+                # the boundary save above already snapshotted this step —
+                # a NaN trigger step never saved, modulo or not)
+                if saver:
+                    if not saved_this_step:
+                        saver.save(step, state)
+                    saver.wait()
+                # contract: reslice_fn hands back state/step_fn resident
+                # on the rebuilt mesh AT this global step (it restores the
+                # checkpoint just flushed) — the loop keeps counting from
+                # here, monotonically
+                state, step_fn = reslice_fn(state, step)
+                reslices += 1
         except KeyboardInterrupt:
             raise
         except BaseException:
@@ -194,16 +268,34 @@ def run(state, step_fn: Callable, batch_at: Callable[[int], dict],
             if restarts > cfg.max_restarts:
                 raise
             if ckpt_dir:
-                restored = ckpt_lib.restore_latest(ckpt_dir, state)
+                if saver:
+                    try:
+                        saver.wait()    # never race the in-flight write
+                    except Exception:   # NOT KeyboardInterrupt/SystemExit
+                        pass            # failed save = missing snapshot;
+                        #   restore falls back to the previous one
+                restored = ckpt_lib.restore_latest(
+                    ckpt_dir, state, shardings=_live_shardings(state))
                 if restored is not None:
                     state, manifest = restored
                     step = int(manifest["step"])
+            warmup = True
+            # the rewind replays steps: stale consecutive-flag counts and
+            # the old timing prior must not leak across the restart
+            straggler_run = 0
+            ewma = None
             continue
     if saver:
-        saver.save(step, state)
-        saver.wait()
+        try:
+            saver.save(step, state)
+            saver.wait()
+        except Exception:               # NOT KeyboardInterrupt/SystemExit
+            # same tolerance the in-loop paths apply to failed saves: the
+            # previous atomic snapshot is still valid, and a completed
+            # run's report + final state matter more than the last write
+            pass
     return RunReport(steps_done=step - start,
                      final_loss=losses[-1] if losses else float("nan"),
                      restarts=restarts, nan_events=nan_events,
                      straggler_steps=straggler_steps, losses=losses,
-                     state=state)
+                     state=state, reslices=reslices)

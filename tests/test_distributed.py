@@ -5,29 +5,11 @@ subprocesses with ``--xla_force_host_platform_device_count=8``; the main
 pytest process keeps its single CPU device (per the assignment).
 """
 
-import os
-import subprocess
-import sys
-import textwrap
-
-import pytest
-
-ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+from conftest import run_forced_subprocess
 
 
 def _run(body: str):
-    code = textwrap.dedent("""
-        import os
-        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-        import jax, jax.numpy as jnp, numpy as np
-        from jax.sharding import PartitionSpec as P
-    """) + textwrap.dedent(body)
-    env = dict(os.environ,
-               PYTHONPATH=os.path.join(ROOT, "src"))
-    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                       text=True, env=env, timeout=600)
-    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
-    return r.stdout
+    return run_forced_subprocess(body, n_devices=8)
 
 
 def test_moe_ep_matches_dense_oracle():
