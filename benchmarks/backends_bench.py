@@ -8,7 +8,12 @@ forced on, so the fused-vs-jnp trajectory is recorded per commit — every
 row carries a ``kernel`` flag and a ``mode`` field ("jnp", "interpret",
 or "pallas" on a real TPU).  Off-TPU the kernel rows measure interpret
 mode (a correctness proxy, not kernel speed), so they run at a reduced
-batch to keep CI wall-clock sane.  The JSON lands at the repo root.
+batch to keep CI wall-clock sane.  Every row is stamped with its
+measurement provenance (platform / interpret flag / jax version) by
+``benchmarks.common.stamp_row``, and two end-to-end serve rows record the
+full-table baseline vs the one-pass ``serve_fused`` robe path
+(``table4_inference_throughput.serve_rows``).  The JSON lands at the repo
+root.
 """
 
 from __future__ import annotations
@@ -53,10 +58,11 @@ def _row(kind: str, batch: int, iters: int, idx_np: np.ndarray,
     for _ in range(iters):
         fn(params, idx).block_until_ready()
     dt = (time.monotonic() - t0) / iters
+    from benchmarks.common import stamp_row
     cost = get_backend(kind).cost(spec, batch)
     mode = "jnp" if not use_kernel else (
         "pallas" if jax.default_backend() == "tpu" else "interpret")
-    return {
+    return stamp_row({
         "name": f"backends/{kind}" + ("+kernel" if use_kernel else ""),
         "kernel": use_kernel,
         "mode": mode,
@@ -67,7 +73,7 @@ def _row(kind: str, batch: int, iters: int, idx_np: np.ndarray,
         "us_per_batch": round(dt * 1e6),
         "cost_bytes_fetched": int(cost["bytes_fetched"]),
         "cost_flops": int(cost["flops"]),
-    }
+    })
 
 
 def run(batch: int = 8192, iters: int = 16):
@@ -84,6 +90,11 @@ def run(batch: int = 8192, iters: int = 16):
     k_iters = iters if on_tpu else 2
     for kind in KERNEL_KINDS:
         rows.append(_row(kind, k_batch, k_iters, idx_np, use_kernel=True))
+    # end-to-end serve rows: the paper's 3.1×-vs-full inference comparison
+    # as recorded data — full-table serve baseline vs the one-pass robe
+    # serve super-kernel (lazy import: table4 pulls in the model stack)
+    from benchmarks.table4_inference_throughput import serve_rows
+    rows.extend(serve_rows(batch=k_batch, iters=k_iters))
     return rows
 
 

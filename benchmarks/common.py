@@ -22,6 +22,17 @@ from repro.train.train_loop import (TrainConfig, build_train_step,
 BENCH_VOCABS = (50_000, 20_000, 80_000, 5_000, 30_000, 1_000, 15_000, 400)
 
 
+def stamp_row(row: dict) -> dict:
+    """Stamp a BENCH json row with its measurement provenance — platform
+    (cpu/tpu/gpu), whether a kernel row ran in Pallas interpret mode, and
+    the jax version — so interpret-mode CI rows can never be mistaken for
+    real TPU numbers.  Mutates and returns ``row``."""
+    row["platform"] = jax.default_backend()
+    row["interpret"] = row.get("mode") == "interpret"
+    row["jax_version"] = jax.__version__
+    return row
+
+
 def make_cfg(arch: str, embedding: str, z: int = 32,
              compression: int = 1000, embed_dim: int = 16,
              **kw) -> RecsysConfig:

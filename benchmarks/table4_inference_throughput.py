@@ -7,6 +7,12 @@ Two complementary measurements:
 2. The hardware-independent statement from the dry-run: per-step collective
    wire bytes of the full (model-parallel) embedding exchange vs ROBE
    (local lookups) on the production mesh — read from results/dryrun.
+
+``serve_rows`` additionally records the end-to-end serve comparison —
+full-table baseline vs the one-pass ``serve_fused`` robe super-kernel —
+as provenance-stamped rows appended to ``BENCH_backends.json`` by
+``backends_bench.run`` (the 3.1× claim's landing place once TPU-mode
+numbers exist).
 """
 
 from __future__ import annotations
@@ -19,9 +25,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import BENCH_VOCABS, make_cfg
+from benchmarks.common import BENCH_VOCABS, make_cfg, stamp_row
 from repro.data.synthetic_ctr import CtrDataConfig, CtrStream
-from repro.models.recsys import forward, init_params
+from repro.models.recsys import forward, init_params, serve_scores
 
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
 
@@ -45,6 +51,46 @@ def throughput(cfg, batch: int = 16384, iters: int = 8,
         fwd(params, b)[0].block_until_ready()
     dt = (time.monotonic() - t0) / iters
     return batch / dt
+
+
+def serve_rows(batch: int = 512, iters: int = 2) -> list:
+    """The paper's serve comparison as recorded ``BENCH_backends.json``
+    rows instead of a loose script: the full-table serve baseline (row-
+    sharded `model` layout on the production mesh; dense jnp path here)
+    against the one-pass robe serve super-kernel (``serve_fused`` —
+    interpret mode off-TPU, so the row is a correctness/regression
+    datapoint; the 3.1× claim needs the TPU-mode run, see ROADMAP)."""
+    on_tpu = jax.default_backend() == "tpu"
+    rows = []
+    for name, cfg, mode in (
+            ("backends/full+serve", make_cfg("dlrm", "full"), "jnp"),
+            ("backends/robe+serve_fused",
+             make_cfg("dlrm", "robe", use_kernel=True),
+             "pallas" if on_tpu else "interpret")):
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        stream = CtrStream(CtrDataConfig(vocab_sizes=BENCH_VOCABS,
+                                         n_dense=cfg.n_dense,
+                                         batch_size=batch))
+        b = {k: jnp.asarray(v) for k, v in stream.batch_at(0).items()
+             if k != "label"}
+        fn = jax.jit(lambda p, bb, c=cfg: serve_scores(p, c, bb))
+        fn(params, b).block_until_ready()          # compile
+        t0 = time.monotonic()
+        for _ in range(iters):
+            fn(params, b).block_until_ready()
+        dt = (time.monotonic() - t0) / iters
+        spec = cfg.embedding_spec()
+        rows.append(stamp_row({
+            "name": name,
+            "kernel": bool(cfg.use_kernel),
+            "mode": mode,
+            "batch": batch,
+            "params": int(spec.param_count),
+            "compression": round(float(spec.compression), 1),
+            "samples_per_s": int(batch / dt),
+            "us_per_batch": round(dt * 1e6),
+        }))
+    return rows
 
 
 def big_cfg(embedding: str, z: int = 32):

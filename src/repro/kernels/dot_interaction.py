@@ -19,7 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
-from repro.kernels.robe_lookup import _pick_batch_tile
+from repro.kernels.tiling import pad_batch, pick_batch_tile, round_up
 
 
 def _kernel(feats_ref, rows_ref, cols_ref, out_ref):
@@ -44,11 +44,9 @@ def dot_interaction_pallas(feats: jnp.ndarray, self_interaction: bool = False,
 
     # pad-and-slice batching (same scheme as the lookup kernels): a prime
     # batch no longer degrades the tile to a divisor-search remnant
-    tb = _pick_batch_tile(b, f, d)
-    b_pad = ((b + tb - 1) // tb) * tb
-    if b_pad != b:
-        feats = jnp.concatenate(
-            [feats, jnp.zeros((b_pad - b, f, d), feats.dtype)])
+    tb = pick_batch_tile(b, f, d)
+    b_pad = round_up(b, tb)
+    feats = pad_batch(feats, b_pad)
 
     out = pl.pallas_call(
         _kernel,

@@ -13,7 +13,7 @@ intermediates.  Here the whole composition runs per VMEM tile:
   * the two row gathers and the product fuse into one pass per tile, so the
     [TB, F, dim] product tile is the only thing written back to HBM.
 
-Batching reuses ``_pick_batch_tile``'s pad-and-slice scheme: the grid tiles
+Batching reuses ``pick_batch_tile``'s pad-and-slice scheme: the grid tiles
 the batch, prime batch sizes pad up to the tile and slice back.
 
 Validated in interpret mode against ``repro.kernels.ref.qr_lookup_ref``
@@ -29,7 +29,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.robe_lookup import _pick_batch_tile
+from repro.kernels.tiling import pad_batch, pick_batch_tile, round_up
 
 
 def _kernel(m: int, idx_ref, qoff_ref, roff_ref, q_ref, r_ref, out_ref):
@@ -56,11 +56,10 @@ def qr_lookup_pallas(q_table: jnp.ndarray, r_table: jnp.ndarray,
     """
     b, f = idx.shape
     dim = q_table.shape[1]
-    tb = _pick_batch_tile(b, f, dim)
-    b_pad = ((b + tb - 1) // tb) * tb
-    if b_pad != b:
-        # pad with row 0 (any valid id) and slice the output back below
-        idx = jnp.concatenate([idx, jnp.zeros((b_pad - b, f), idx.dtype)])
+    tb = pick_batch_tile(b, f, dim)
+    b_pad = round_up(b, tb)
+    # pad with row 0 (any valid id) and slice the output back below
+    idx = pad_batch(idx, b_pad)
 
     out = pl.pallas_call(
         functools.partial(_kernel, m),

@@ -34,6 +34,11 @@ from jax.experimental import pallas as pl
 
 from repro.core.hashing import mul32, add64, mod_m31, split31
 from repro.core.robe import RobeSpec
+from repro.kernels.tiling import pad_batch, pick_batch_tile, round_up
+
+# compat alias: the tile policy moved to repro.kernels.tiling (one shared
+# copy for every kernel); older call sites import it from here
+_pick_batch_tile = pick_batch_tile
 
 
 def _hash_rows(spec: RobeSpec, table_ids: jnp.ndarray, rows: jnp.ndarray,
@@ -131,17 +136,6 @@ def _general_kernel(spec: RobeSpec, dim: int,
     out_ref[...] = out
 
 
-def _pick_batch_tile(batch: int, f: int, dim: int) -> int:
-    """Batch tile so the output tile stays ≲ 2 MB of VMEM.
-
-    The tile need NOT divide the batch: callers pad the batch up to the
-    next tile multiple and slice the output back.  (The old divisor search
-    degraded to tb=1 for prime batch sizes — one grid step per row.)"""
-    budget = 2 * 1024 * 1024 // 4
-    tb = max(1, budget // max(1, f * dim))
-    return min(tb, batch, 1024)
-
-
 @functools.partial(jax.jit, static_argnames=("spec", "dim", "table_ids",
                                              "interpret"))
 def robe_lookup_pallas(memory: jnp.ndarray, rows: jnp.ndarray,
@@ -154,12 +148,10 @@ def robe_lookup_pallas(memory: jnp.ndarray, rows: jnp.ndarray,
     """
     b, f = rows.shape
     aligned = (spec.block_size % dim == 0)
-    tb = _pick_batch_tile(b, f, dim)
-    b_pad = ((b + tb - 1) // tb) * tb
-    if b_pad != b:
-        # pad with row 0 (any valid id) and slice the output back below
-        rows = jnp.concatenate(
-            [rows, jnp.zeros((b_pad - b, f), rows.dtype)])
+    tb = pick_batch_tile(b, f, dim)
+    b_pad = round_up(b, tb)
+    # pad with row 0 (any valid id) and slice the output back below
+    rows = pad_batch(rows, b_pad)
     grid = (b_pad // tb,)
 
     if aligned:

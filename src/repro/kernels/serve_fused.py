@@ -1,0 +1,150 @@
+"""Pallas TPU kernel: the one-pass serve super-kernel.
+
+The paper's inference claim (3.1× over the 100 GB MLPerf DLRM baseline)
+rests on the compressed ROBE array staying resident in fast memory during
+scoring.  The unfused serve path is lookup-per-field → concat →
+``dot_interaction`` as separate XLA ops: the ROBE array and the pooled
+embeddings round-trip through HBM once per op.  This kernel does the whole
+sparse half of a DLRM score in a single pass per batch tile:
+
+  1. ROBE hash offsets for ALL sparse fields at once (VPU uint32 math,
+     shared with ``repro.core.robe.robe_slots`` — one copy of the hash),
+  2. gather from the VMEM-resident ROBE array with sign correction,
+  3. bag pooling in-register (−1-padded multi-hot bags, f32 accumulator),
+  4. the dot-interaction gram of [bottom-MLP output; pooled embeddings]
+     accumulated in f32 on the MXU, strictly-lower triangle out.
+
+No per-field ``[B, F, D]`` intermediate ever touches HBM — the tile's
+pooled embeddings live in a VMEM scratch accumulator and feed the gram
+directly.
+
+Arrays beyond one tile's VMEM budget stream through a second grid
+dimension: ``grid = (batch_tiles, mem_chunks)`` with the chunk axis
+iterating fastest, so the scratch accumulator persists across the chunks
+of one batch tile and Pallas's pipeline double-buffers the HBM→VMEM chunk
+fetches.  Each slot contributes from exactly the one chunk that contains
+it (chunk-local bounds test), so the result is independent of the chunk
+size.
+
+Validated in interpret mode against ``repro.kernels.ref.serve_fused_ref``
+by the kernel-conformance harness (tests/test_kernel_conformance.py).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.robe import RobeSpec, robe_signs, robe_slots
+from repro.kernels.tiling import pad_batch, pick_batch_tile, round_up
+
+#: default memory-chunk size (elements): 4 MB of f32 per grid step — small
+#: enough to double-buffer in VMEM, large enough that the paper-scale
+#: CriteoTB array (~13M slots at 1000×) streams in ~13 chunks per tile
+_DEFAULT_CHUNK = 1 << 20
+
+
+def _kernel(spec: RobeSpec, dim: int, chunk: int,
+            idx_ref, tids_ref, bot_ref, tri_r_ref, tri_c_ref, mem_ref,
+            out_ref, acc_ref):
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    idx = idx_ref[...]                                   # [TB, F, bag]
+    mask = idx >= 0                                      # −1 = padded slot
+    safe = jnp.where(mask, idx, 0)
+    tids = jnp.broadcast_to(tids_ref[...][None, :, None], safe.shape)
+    # (1) all fields' slots at once — same uint32 math as the jnp path
+    slots = robe_slots(spec, tids, safe, dim).astype(jnp.int32)
+    # (2) chunk-local gather: only slots inside THIS chunk contribute, so
+    # streaming the array chunk-by-chunk reads every slot exactly once
+    local = slots - c * chunk
+    ok = (local >= 0) & (local < chunk) & mask[..., None]
+    local = jnp.clip(local, 0, chunk - 1)
+    vals = jnp.take(mem_ref[...], local.reshape(-1),
+                    axis=0).reshape(local.shape).astype(jnp.float32)
+    if spec.use_sign:
+        vals = vals * robe_signs(spec, tids, safe, dim)
+    vals = jnp.where(ok, vals, 0.0)
+    # (3) bag pooling in-register: accumulate into the persistent scratch
+    acc_ref[...] += vals.sum(axis=2)                     # [TB, F, dim]
+
+    @pl.when(c == pl.num_programs(1) - 1)
+    def _finalize():
+        # single rounding to the serve dtype (matches the reference's
+        # pooled.astype(bot.dtype)), then the gram in f32 on the MXU
+        emb = acc_ref[...].astype(out_ref.dtype).astype(jnp.float32)
+        bot = bot_ref[...].astype(jnp.float32)
+        feats = jnp.concatenate([bot[:, None, :], emb], axis=1)
+        gram = jax.lax.dot_general(
+            feats, feats,
+            dimension_numbers=(((2,), (2,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32)          # [TB, F+1, F+1]
+        tri = gram[:, tri_r_ref[...], tri_c_ref[...]]
+        out_ref[...] = tri.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("table_ids", "dim", "spec",
+                                             "interpret", "mem_chunk"))
+def serve_fused_pallas(memory: jnp.ndarray, idx: jnp.ndarray,
+                       bot: jnp.ndarray, table_ids: Tuple[int, ...],
+                       dim: int, spec: RobeSpec, interpret: bool = True,
+                       mem_chunk: int = 0) -> jnp.ndarray:
+    """Fused multi-field ROBE lookup → bag pooling → dot interaction.
+
+    memory: [|M|] ROBE array; idx: [B, F] or [B, F, bag] int32 row ids
+    (−1 = padded bag slot); bot: [B, dim] dense bottom-MLP output.
+    Returns [B, (F+1)·F/2] — the strictly-lower triangle of the gram of
+    [bot; pooled embeddings], in ``bot``'s dtype.
+
+    ``mem_chunk`` (elements) overrides the memory streaming granularity;
+    0 picks one chunk when the array fits, else ``_DEFAULT_CHUNK``.
+    """
+    if idx.ndim == 2:
+        idx = idx[..., None]
+    b, f, bag = idx.shape
+    rows, cols = np.tril_indices(f + 1, k=-1)
+    n_pairs = len(rows)
+
+    tb = pick_batch_tile(b, f * bag, dim)    # bounds the [TB,F,bag,dim] set
+    b_pad = round_up(b, tb)
+    idx = pad_batch(idx, b_pad, fill=-1)     # padded rows pool to zero
+    bot = pad_batch(bot, b_pad)
+
+    m = memory.shape[0]
+    chunk = min(m, mem_chunk if mem_chunk > 0 else
+                (m if m <= _DEFAULT_CHUNK else _DEFAULT_CHUNK))
+    m_pad = round_up(m, chunk)
+    if m_pad != m:          # pad slots are never in [0, |M|): never gathered
+        memory = jnp.concatenate(
+            [memory, jnp.zeros((m_pad - m,), memory.dtype)])
+
+    tids = jnp.asarray(table_ids, jnp.uint32)
+    out = pl.pallas_call(
+        functools.partial(_kernel, spec, dim, chunk),
+        grid=(b_pad // tb, m_pad // chunk),  # chunk axis fastest: the
+        # scratch accumulator persists across one tile's chunks
+        in_specs=[
+            pl.BlockSpec((tb, f, bag), lambda i, c: (i, 0, 0)),   # row ids
+            pl.BlockSpec((f,), lambda i, c: (0,)),                # table ids
+            pl.BlockSpec((tb, dim), lambda i, c: (i, 0)),         # bottom MLP
+            pl.BlockSpec((n_pairs,), lambda i, c: (0,)),          # tril rows
+            pl.BlockSpec((n_pairs,), lambda i, c: (0,)),          # tril cols
+            pl.BlockSpec((chunk,), lambda i, c: (c,)),            # M chunk
+        ],
+        out_specs=pl.BlockSpec((tb, n_pairs), lambda i, c: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b_pad, n_pairs), bot.dtype),
+        scratch_shapes=[pltpu.VMEM((tb, f, dim), jnp.float32)],
+        interpret=interpret,
+    )(idx, tids, bot, jnp.asarray(rows, jnp.int32),
+      jnp.asarray(cols, jnp.int32), memory)
+    return out[:b] if b_pad != b else out

@@ -1,0 +1,44 @@
+"""Shared batch-tiling helpers for the Pallas kernels.
+
+Every kernel in this package tiles its grid over the batch with the same
+pad-and-slice scheme: pick a tile that keeps the per-step VMEM working set
+bounded, pad the batch up to the next tile multiple, and slice the output
+back.  The tile deliberately need NOT divide the batch — a divisor search
+degrades to one-row tiles for prime batch sizes (one grid step per row).
+
+Hoisted here from per-kernel copies so the policy has exactly one home;
+``robe_lookup`` / ``dot_interaction`` / ``qr_lookup`` / ``tt_lookup`` /
+``serve_fused`` all import it (tests/test_tiling.py pins the semantics).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["pick_batch_tile", "round_up", "pad_batch"]
+
+
+def pick_batch_tile(batch: int, f: int, dim: int) -> int:
+    """Batch tile so a [tile, f, dim] f32 working set stays ≲ 2 MB of VMEM.
+
+    The tile need NOT divide the batch: callers pad the batch up to the
+    next tile multiple and slice the output back.  (The old divisor search
+    degraded to tb=1 for prime batch sizes — one grid step per row.)"""
+    budget = 2 * 1024 * 1024 // 4
+    tb = max(1, budget // max(1, f * dim))
+    return min(tb, batch, 1024)
+
+
+def round_up(n: int, mult: int) -> int:
+    """Smallest multiple of ``mult`` that is ≥ ``n``."""
+    return ((n + mult - 1) // mult) * mult
+
+
+def pad_batch(x: jnp.ndarray, b_pad: int, fill=0) -> jnp.ndarray:
+    """Pad the leading (batch) axis of ``x`` up to ``b_pad`` rows with
+    ``fill`` (no-op when already there).  The inverse is ``out[:b]``."""
+    b = x.shape[0]
+    if b_pad == b:
+        return x
+    pad = jnp.full((b_pad - b,) + x.shape[1:], fill, x.dtype)
+    return jnp.concatenate([x, pad])

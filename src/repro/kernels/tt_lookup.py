@@ -13,7 +13,7 @@ intermediates.  Here everything runs per VMEM tile:
     MXU-batched einsums over the [TB·F, ...] gathered core slices, f32
     accumulation, and only the final [TB, F, dim] tile is written to HBM.
 
-Batching reuses ``_pick_batch_tile``'s pad-and-slice scheme, sized by the
+Batching reuses ``pick_batch_tile``'s pad-and-slice scheme, sized by the
 larger of the output row and the gathered core slices per element so the
 working set stays inside the VMEM budget.
 
@@ -30,7 +30,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.robe_lookup import _pick_batch_tile
+from repro.kernels.tiling import pad_batch, pick_batch_tile, round_up
 
 
 def _kernel(n2: int, n3: int, dim: int,
@@ -71,11 +71,10 @@ def tt_lookup_pallas(core0: jnp.ndarray, core1: jnp.ndarray,
     # VMEM working set per (row, field): the gathered core slices + the
     # contracted output row — size the batch tile by the larger of the two
     per_elem = max(dim, d1 * r + r * d2 * r + r * d3)
-    tb = _pick_batch_tile(b, f, per_elem)
-    b_pad = ((b + tb - 1) // tb) * tb
-    if b_pad != b:
-        # pad with row 0 (any valid id) and slice the output back below
-        idx = jnp.concatenate([idx, jnp.zeros((b_pad - b, f), idx.dtype)])
+    tb = pick_batch_tile(b, f, per_elem)
+    b_pad = round_up(b, tb)
+    # pad with row 0 (any valid id) and slice the output back below
+    idx = pad_batch(idx, b_pad)
 
     out = pl.pallas_call(
         functools.partial(_kernel, n2, n3, dim),

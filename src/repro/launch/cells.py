@@ -252,7 +252,10 @@ def build_recsys_cell(arch_id: str, shape_name: str, ctx,
         if cfg.arch == "two_tower":
             fn = lambda params, batch: R.tower_vectors(params, cfg, batch)
         else:
-            fn = lambda params, batch: R.forward(params, cfg, batch)
+            # serve_scores marks the inference hot path (serve=True), so a
+            # backend with a fused serve super-kernel (robe + use_kernel)
+            # scores in one Pallas pass per batch tile
+            fn = lambda params, batch: R.serve_scores(params, cfg, batch)
         flops = 2.0 * dense_params * b
         return BuiltCell(cell_id, fn, (pshapes, bshape),
                          _shardify(ctx, (pspecs, bspec)), flops)
@@ -277,7 +280,7 @@ def build_recsys_cell(arch_id: str, shape_name: str, ctx,
         if backend.local_batch:
             bspec = {k: P("model", *([None] * (len(v.shape) - 1)))
                      for k, v in bshape.items()}
-        fn = lambda params, batch: R.forward(params, cfg, batch)
+        fn = lambda params, batch: R.serve_scores(params, cfg, batch)
         flops = 2.0 * dense_params * n_cand
         note = "retrieval-scoring as bulk forward over 1e6 rows"
     return BuiltCell(cell_id, fn, (pshapes, bshape),

@@ -20,7 +20,7 @@ from repro.core.robe import RobeSpec
 from repro.dist import api as dist
 from repro.nn.core import dense_apply, dense_init, mlp_apply, mlp_init
 from repro.nn.embeddings import EmbeddingSpec, embedding_init, \
-    embedding_lookup, embedding_lookup_dist
+    embedding_lookup, embedding_lookup_dist, get_backend
 from repro.nn.interactions import (autoint_layer_apply, autoint_layer_init,
                                    bilinear_apply, bilinear_init, cin_apply,
                                    cin_init, cross_net_apply, cross_net_init,
@@ -142,19 +142,47 @@ def _embed(params, cfg: RecsysConfig, sparse_ids: jnp.ndarray) -> jnp.ndarray:
     return emb.astype(cfg.compute_dtype)
 
 
-def forward(params, cfg: RecsysConfig, batch: dict) -> jnp.ndarray:
-    """batch: {"dense": [B,n_dense], "sparse": [B,F]} -> logits [B]."""
+def _dlrm_interaction(params, cfg: RecsysConfig, batch: dict,
+                      bot: jnp.ndarray, serve: bool) -> jnp.ndarray:
+    """[B, (F+1)·F/2] dot-interaction triangle of [bot; field embeddings].
+
+    On the serve path with ``use_kernel`` set, a backend that offers the
+    optional ``fused_serve`` protocol method (robe) computes the whole
+    lookup → bag-pool → gram chain in one Pallas pass — no [B, F, D]
+    intermediate in HBM.  Everywhere else (training, substrates without a
+    super-kernel, ZeRO-3 placement): the unfused lookup + dot_interaction.
+    """
+    if serve and cfg.use_kernel:
+        spec = cfg.embedding_spec()
+        backend = get_backend(spec.kind)
+        if backend.fused_serve is not None:
+            inter = backend.fused_serve(params["embedding"], spec,
+                                        batch["sparse"], bot)
+            if inter is not None:
+                return inter
+    emb = _embed(params, cfg, batch["sparse"])
+    feats = jnp.concatenate([bot[:, None, :], emb], axis=1)
+    return dot_interaction_op(feats, use_kernel=cfg.use_kernel)
+
+
+def forward(params, cfg: RecsysConfig, batch: dict,
+            serve: bool = False) -> jnp.ndarray:
+    """batch: {"dense": [B,n_dense], "sparse": [B,F]} -> logits [B].
+
+    ``serve`` marks the inference hot path: forward-only fast paths (the
+    fused serve super-kernel) may engage; training always takes the
+    general path.
+    """
     a = cfg.arch
-    emb = _embed(params, cfg, batch["sparse"])       # [B,F,D]
-    b, f, d = emb.shape
-    flat = emb.reshape(b, f * d)
     if a == "dlrm":
         dense = batch["dense"].astype(cfg.compute_dtype)
         bot = mlp_apply(params["bot"], dense, final_act=jax.nn.relu)
-        feats = jnp.concatenate([bot[:, None, :], emb], axis=1)
-        inter = dot_interaction_op(feats, use_kernel=cfg.use_kernel)
+        inter = _dlrm_interaction(params, cfg, batch, bot, serve)
         top_in = jnp.concatenate([bot, inter], axis=-1)
         return mlp_apply(params["top"], top_in)[:, 0]
+    emb = _embed(params, cfg, batch["sparse"])       # [B,F,D]
+    b, f, d = emb.shape
+    flat = emb.reshape(b, f * d)
     if a == "autoint":
         x = emb
         for layer in params["attn"]:
@@ -230,4 +258,4 @@ def serve_scores(params, cfg: RecsysConfig, batch: dict) -> jnp.ndarray:
                        cand.astype(cfg.compute_dtype).reshape(n, -1))
         vi = vi / jnp.linalg.norm(vi, axis=-1, keepdims=True).clip(1e-6)
         return (u @ vi.T)                        # [B, n_candidates]
-    return forward(params, cfg, batch)
+    return forward(params, cfg, batch, serve=True)

@@ -65,6 +65,29 @@ class RobeBackend(EmbeddingBackend):
         return robe_lookup(params["memory"], idx, tuple(fields), spec.dim,
                            spec.robe, spec.use_kernel)
 
+    def fused_serve(self, params, spec, idx, bot):
+        """One-pass serve super-kernel: multi-field lookup → bag pooling →
+        dot-interaction gram in a single Pallas pass (``kernels.ops.
+        serve_fused``) — the ROBE array is read once per batch tile and no
+        [B, F, D] intermediate touches HBM.
+
+        idx [B, F] (or [B, F, bag], −1-padded), bot [B, dim] dense bottom-
+        MLP output -> [B, (F+1)·F/2] interaction triangle in bot's dtype.
+        Returns None under the ZeRO-3 placement (the array is sharded over
+        ``model``; callers fall back to the gather-per-step lookup path).
+        """
+        if spec.placement == "model":
+            return None
+        from repro.dist import api as dist
+        from repro.kernels.ops import serve_fused
+        fields = tuple(range(spec.n_fields))
+        out = serve_fused(params["memory"], idx, bot, fields, spec.dim,
+                          spec.robe, spec.use_kernel)
+        ctx = dist.current()
+        if ctx is not None and idx.shape[0] % ctx.n_devices == 0:
+            out = dist.shard(out, "flat_batch", None)
+        return out
+
     def lookup_dist(self, params, spec, idx, *, compute_dtype=None):
         from repro.dist import api as dist
         ctx = dist.current()

@@ -254,6 +254,46 @@ def test_dlrm_config_sweeps_backend(kind):
     assert all(bool(jnp.all(jnp.isfinite(l))) for l in jax.tree.leaves(grads))
 
 
+# ---------------------------------------------------------------------------
+# fused_serve protocol (the one-pass serve super-kernel hook)
+# ---------------------------------------------------------------------------
+
+def test_fused_serve_default_none():
+    """Optional protocol member: backends without a fused serve path leave
+    the class attribute as None; robe implements it."""
+    for kind in ("full", "hashed", "tt"):
+        assert get_backend(kind).fused_serve is None
+    assert callable(get_backend("robe").fused_serve)
+
+
+def test_robe_fused_serve_declines_model_placement():
+    spec = _spec("robe", placement="model")
+    assert get_backend("robe").fused_serve(None, spec, None, None) is None
+
+
+def test_dlrm_serve_fused_path_matches_unfused():
+    """End-to-end parity: dlrm-rm2 smoke scoring through the one-pass
+    serve super-kernel (use_kernel=True → backend.fused_serve, no [B,F,D]
+    intermediate) equals the unfused lookup → concat → dot-interaction
+    path to 1e-5."""
+    import dataclasses
+
+    from repro.configs import get_arch
+    from repro.models import recsys as R
+    cfg = get_arch("dlrm-rm2").make_config("smoke", embedding="robe")
+    cfg_k = dataclasses.replace(cfg, use_kernel=True)
+    params = R.init_params(jax.random.PRNGKey(0), cfg)
+    rs = np.random.RandomState(5)
+    batch = {"sparse": jnp.asarray(rs.randint(0, 40, (16, cfg.n_fields)),
+                                   jnp.int32),
+             "dense": jnp.asarray(rs.randn(16, cfg.n_dense), jnp.float32)}
+    want = R.serve_scores(params, cfg, batch)
+    got = R.serve_scores(params, cfg_k, batch)
+    assert got.shape == want.shape
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
 @pytest.mark.parametrize("kind", BACKENDS)
 def test_cost_model_shape(kind):
     spec = _spec(kind)

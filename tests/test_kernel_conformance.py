@@ -1,8 +1,9 @@
 """Kernel-conformance harness: the shared gate every fused Pallas op must
 pass before it may ship (ROADMAP §Kernel conformance).
 
-One parametrized suite over the four fused ops — ``robe_lookup``,
-``dot_interaction``, ``qr_lookup``, ``tt_lookup`` — asserting
+One parametrized suite over the five fused ops — ``robe_lookup``,
+``dot_interaction``, ``qr_lookup``, ``tt_lookup``, ``serve_fused`` —
+asserting
 
   (a) Pallas-interpret forward == the jnp reference to 1e-5 (f32) /
       1e-2 (bf16),
@@ -29,7 +30,7 @@ import pytest
 from repro.core.robe import RobeSpec
 from repro.kernels import ref
 from repro.kernels.ops import (dot_interaction, qr_lookup, robe_lookup,
-                               tt_lookup)
+                               serve_fused, tt_lookup)
 from repro.nn.embedding_backends.hashed import qr_layout
 from repro.nn.embedding_backends.tt import factor_dim, factor_rows
 
@@ -81,12 +82,23 @@ def _case(name, dtype=jnp.float32, b=16, dim=24, vocabs=VOCABS, seed=0):
                                         factors, dim, uk)
         reference = lambda p: ref.tt_lookup_ref(p[0], p[1], p[2], idx,
                                                 offsets, factors, dim)
+    elif name == "serve":
+        # the one-pass serve super-kernel: params = (ROBE array, bottom-MLP
+        # output); multi-field offsets exercised via per-field table ids
+        spec = RobeSpec(size=4096, block_size=16, seed=7, use_sign=True)
+        params = (jnp.asarray(rs.randn(4096), dtype),
+                  jnp.asarray(rs.randn(b, dim), dtype))
+        tids = tuple(range(f))
+        fused = lambda p, uk: serve_fused(p[0], idx, p[1], tids, dim, spec,
+                                          uk)
+        reference = lambda p: ref.serve_fused_ref(
+            p[0], idx, p[1], jnp.arange(f, dtype=jnp.uint32), dim, spec)
     else:
         raise AssertionError(name)
     return fused, reference, params
 
 
-CASES = ("robe", "dot", "qr", "tt")
+CASES = ("robe", "dot", "qr", "tt", "serve")
 #: every fused op carries a custom_vjp (explicit scatter-add / symmetric
 #: gram contraction) — the Pallas forwards have no autodiff rule
 VJP_CASES = CASES
@@ -167,9 +179,9 @@ def test_custom_vjp_grad_matches_ref_grad(name, dtype, use_kernel):
 def test_prime_batch_pads_and_slices(name):
     """b=13 with f·dim sized so the VMEM tile is SMALLER than the batch:
     the pad branch really runs, and the output slices back to b rows."""
-    from repro.kernels.robe_lookup import _pick_batch_tile
+    from repro.kernels.tiling import pick_batch_tile
     b, f, dim = 13, 8, 6000                       # tile 10 < 13 → pads to 20
-    assert _pick_batch_tile(b, f, dim) < b
+    assert pick_batch_tile(b, f, dim) < b
     vocabs = tuple(range(30, 30 + 8))
     fused, reference, params = _case(name, b=b, dim=dim, vocabs=vocabs)
     got = fused(params, True)
@@ -208,6 +220,33 @@ def test_bag_lookup_flows_through_kernel(kind):
     got = embedding_lookup_bag(params, spec_ker, idx, combiner="mean",
                                weights=w)
     _assert_close(got, want, jnp.float32)
+
+
+def test_serve_fused_bag_and_chunked_memory():
+    """The serve super-kernel's two hard modes at once: multi-hot bags with
+    −1 padding (including one fully-empty bag) pooled in-register, and a
+    ROBE array split across memory chunks (grid dim 1) so the gather has to
+    pick each slot's contribution from exactly one chunk revisit."""
+    from repro.kernels.serve_fused import serve_fused_pallas
+    spec = RobeSpec(size=4096, block_size=16, seed=7, use_sign=True)
+    b, f, bag, dim = 6, 4, 3, 24
+    rs = np.random.RandomState(3)
+    idx = rs.randint(0, 37, (b, f, bag)).astype(np.int32)
+    idx[0, 0, 1:] = -1
+    idx[3, 2, :] = -1                             # empty bag pools to zero
+    idx = jnp.asarray(idx)
+    memory = jnp.asarray(rs.randn(4096), jnp.float32)
+    bot = jnp.asarray(rs.randn(b, dim), jnp.float32)
+    tids = tuple(range(f))
+    want = ref.serve_fused_ref(memory, idx, bot,
+                               jnp.arange(f, dtype=jnp.uint32), dim, spec)
+    # multi-chunk: 4096 / 512 = 8 memory revisits per batch tile
+    chunked = serve_fused_pallas(memory, idx, bot, tids, dim, spec,
+                                 interpret=True, mem_chunk=512)
+    _assert_close(chunked, want, jnp.float32)
+    # the op entry point (single chunk — whole array resident)
+    _assert_close(serve_fused(memory, idx, bot, tids, dim, spec, True),
+                  want, jnp.float32)
 
 
 # ---------------------------------------------------------------------------

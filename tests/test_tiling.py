@@ -1,0 +1,60 @@
+"""Unit tests pinning the shared tiling policy in ``kernels/tiling.py``.
+
+Every fused kernel imports its batch-tile / pad-and-slice arithmetic from
+this one module, so its semantics are load-bearing: the VMEM budget, the
+min() clamps, and the exact pad/slice round-trip are asserted here once
+instead of implicitly in four kernels.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.tiling import pad_batch, pick_batch_tile, round_up
+
+
+def test_pick_batch_tile_vmem_budget():
+    # budget is 2 MiB of f32: tb = (2·1024·1024/4) // (f·dim), clamped
+    assert pick_batch_tile(13, 8, 6000) == (2 * 1024 * 1024 // 4) // 48000
+    assert pick_batch_tile(13, 8, 6000) == 10          # < b → pad branch
+
+
+def test_pick_batch_tile_clamps_to_batch():
+    # tiny rows: budget allows a huge tile, but never exceed the batch
+    assert pick_batch_tile(3, 4, 16) == 3
+    # ...and never exceed the 1024 hard cap even for huge batches
+    assert pick_batch_tile(1 << 20, 1, 1) == 1024
+
+
+def test_pick_batch_tile_depends_only_on_row_bytes():
+    # the tile is a function of (f·dim), not of the batch, once unclamped
+    assert pick_batch_tile(8191, 26, 64) == pick_batch_tile(8192, 26, 64)
+    assert pick_batch_tile(8191, 26, 64) > 1
+
+
+def test_pick_batch_tile_never_zero():
+    # a row bigger than the whole budget still yields a 1-row tile
+    assert pick_batch_tile(64, 4096, 4096) == 1
+
+
+def test_round_up():
+    assert round_up(13, 10) == 20
+    assert round_up(20, 10) == 20
+    assert round_up(1, 512) == 512
+    assert round_up(0, 8) == 0
+
+
+def test_pad_batch_round_trip():
+    x = jnp.asarray(np.arange(13 * 3).reshape(13, 3), jnp.int32)
+    y = pad_batch(x, 20, fill=-1)
+    assert y.shape == (20, 3) and y.dtype == x.dtype
+    np.testing.assert_array_equal(np.asarray(y[:13]), np.asarray(x))
+    assert int(y[13:].min()) == int(y[13:].max()) == -1
+    # no-op when already sized: the same array comes back
+    assert pad_batch(x, 13) is x
+
+
+def test_legacy_alias_still_exported():
+    # kernels historically exposed _pick_batch_tile from robe_lookup;
+    # the alias must keep resolving to the shared policy
+    from repro.kernels.robe_lookup import _pick_batch_tile
+    assert _pick_batch_tile is pick_batch_tile
