@@ -27,6 +27,19 @@ def _backends(fast: bool) -> None:
     _emit("backends/wall_s", round((time.monotonic() - t0) * 1e6), {})
 
 
+def _serving(fast: bool) -> None:
+    """Serving-tier replay grid -> BENCH_serving.json (see
+    benchmarks/table4_inference_throughput.serving_rows)."""
+    from benchmarks import table4_inference_throughput as t4
+    t0 = time.monotonic()
+    rows = t4.serving_rows(fast=fast)
+    t4.write_serving_json(rows)
+    for r in rows:
+        r = dict(r)
+        _emit(r.pop("name"), "", r)
+    _emit("serving/wall_s", round((time.monotonic() - t0) * 1e6), {})
+
+
 def main() -> None:
     fast = "--fast" in sys.argv
     print("name,us_per_call,derived")
@@ -35,7 +48,12 @@ def main() -> None:
         _backends(fast)
         return
 
+    if "--serving-only" in sys.argv:
+        _serving(fast)
+        return
+
     _backends(fast)
+    _serving(fast)
 
     from benchmarks import table1_memory_fetches as t1
     t0 = time.monotonic()

@@ -1,12 +1,20 @@
 """Paper Table 4: inference throughput, original vs ROBE-Z.
 
-Two complementary measurements:
+Three complementary measurements:
 1. CPU wall-clock samples/second at the paper's batch 16384 (DLRM forward),
    full tables vs ROBE-Z for Z ∈ {1, 2, 8, 32} — the directional claim
    (compressed array ⇒ cache-resident ⇒ faster fetch) on this host.
 2. The hardware-independent statement from the dry-run: per-step collective
    wire bytes of the full (model-parallel) embedding exchange vs ROBE
    (local lookups) on the production mesh — read from results/dryrun.
+3. ``serving_rows`` — the end-to-end serving-tier replay
+   (``repro.serve.replay``): open-loop Poisson traffic at the configured
+   offered load through the deadline-aware vs fixed-size batching policies
+   into every resident substrate of the ``EmbeddingServer``, hot-row cache
+   in front of the fetch-bound backends.  p50/p99/throughput/shed/hit-rate
+   per cell, provenance-stamped (``stamp_row``) and written to
+   ``BENCH_serving.json`` — this is the harness for the serving claims,
+   not a loose script.
 
 ``serve_rows`` additionally records the end-to-end serve comparison —
 full-table baseline vs the one-pass ``serve_fused`` robe super-kernel —
@@ -30,6 +38,12 @@ from repro.data.synthetic_ctr import CtrDataConfig, CtrStream
 from repro.models.recsys import forward, init_params, serve_scores
 
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+SERVING_JSON = os.path.join(os.path.dirname(__file__), "..",
+                            "BENCH_serving.json")
+
+# serving-replay vocab layout: small enough that a CI replay stays in
+# budget, large enough that a 16k-row hot cache holds only the skew's head
+SERVING_VOCABS = (12_000, 6_000, 18_000, 4_000)
 
 
 # the paper's regime: the full table far exceeds the last-level cache while
@@ -91,6 +105,43 @@ def serve_rows(batch: int = 512, iters: int = 2) -> list:
             "us_per_batch": round(dt * 1e6),
         }))
     return rows
+
+
+def serving_rows(fast: bool = False) -> list:
+    """The serving-tier benchmark grid -> provenance-stamped rows.
+
+    backend × {deadline, fixed} at zipf 1.05 (every substrate gets its
+    p50/p99/throughput row; ``full``/``hashed`` rows carry the hot-cache
+    hit rate), plus a low-skew control cell (zipf 4.0 concentrates mass
+    at the other end and much less — the hit rate should drop) for the
+    ``full`` backend.  Service times are measured on the real jitted
+    scorers; queueing/waiting is exactly modeled on the replay's virtual
+    clock (see ``repro.serve.replay``).
+    """
+    from repro.serve.replay import ReplayConfig, run_cell, run_grid
+    from repro.serve.server import EmbeddingServer, ServerConfig
+
+    server = EmbeddingServer(ServerConfig(vocab_sizes=SERVING_VOCABS))
+    base = ReplayConfig(n_requests=1024 if fast else 4096,
+                        rate_hz=2000.0, deadline_s=0.025,
+                        max_batch=32, max_wait_s=0.050)
+    warm = 32 if fast else 64
+    rows = run_grid(server, base=base, zipfs=(1.05,), warm_batches=warm)
+    server.reset_cache_stats()
+    rows.append(run_cell(server, "full",
+                         ReplayConfig(n_requests=1024 if fast else 4096),
+                         zipf=4.0, warm_batches=warm))
+    out = []
+    for r in rows:
+        name = f"serving/{r['backend']}+{r['policy']}-z{r['zipf']}"
+        out.append(stamp_row({"name": name, **r}))
+    return out
+
+
+def write_serving_json(rows: list, path: str = SERVING_JSON) -> None:
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=1, sort_keys=True)
+        f.write("\n")
 
 
 def big_cfg(embedding: str, z: int = 32):

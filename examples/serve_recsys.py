@@ -1,49 +1,85 @@
-"""Serving example: batched online CTR scoring + two-tower retrieval.
+"""Serving example: the production serving tier end to end.
 
-Demonstrates the two inference shapes the assignment exercises at pod scale
-(serve_p99 micro-batches; retrieval_cand one-query-vs-many) at CPU scale,
-with latency percentiles.
+Three shapes:
+
+1. ``async_router`` — online scoring through the ``AsyncRouter``: requests
+   submitted one by one with a 25ms latency budget, batched adaptively by
+   the deadline-aware close-out, scored on the ``EmbeddingServer``'s
+   ``full`` substrate through its hot-row cache.
+2. ``replay_policies`` — the virtual-clock traffic replay comparing the
+   deadline policy against fixed-size batching at equal offered load
+   (the measurement behind ``BENCH_serving.json``).
+3. ``retrieval`` — the one-query-vs-many two-tower shape.
 
     PYTHONPATH=src python examples/serve_recsys.py
 """
 
+import asyncio
+import dataclasses
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.data.synthetic_ctr import CtrDataConfig, CtrStream
-from repro.models.recsys import (RecsysConfig, forward, init_params,
-                                 serve_scores)
+from repro.data.synthetic_ctr import CtrDataConfig, RequestStream
+from repro.models.recsys import RecsysConfig, init_params, serve_scores
+from repro.serve import AsyncRouter, DeadlineBatcher, RouterConfig
+from repro.serve.replay import ReplayConfig, run_cell
+from repro.serve.server import EmbeddingServer, ServerConfig
 
-VOCABS = (200_000, 80_000, 150_000, 40_000)
+VOCABS = (12_000, 6_000, 18_000, 4_000)
 
 
-def ctr_serving():
-    cfg = RecsysConfig(
-        name="serve", arch="dlrm", n_dense=8, bot_mlp=(64, 16),
-        top_mlp=(64, 1), embed_dim=16, vocab_sizes=VOCABS,
-        embedding="robe", robe_size=sum(VOCABS) * 16 // 1000, robe_block=32)
-    params = init_params(jax.random.PRNGKey(0), cfg)
-    stream = CtrStream(CtrDataConfig(vocab_sizes=VOCABS, n_dense=8,
-                                     batch_size=512))
-    fwd = jax.jit(lambda p, b: forward(p, cfg, b))
-    # warm
-    b0 = {k: jnp.asarray(v) for k, v in stream.batch_at(0).items()
-          if k != "label"}
-    fwd(params, b0).block_until_ready()
-    lat = []
-    for s in range(64):
-        b = {k: jnp.asarray(v) for k, v in stream.batch_at(s).items()
-             if k != "label"}
+def build_server() -> EmbeddingServer:
+    t0 = time.monotonic()
+    server = EmbeddingServer(ServerConfig(vocab_sizes=VOCABS))
+    print(f"server up: substrates {server.backends}, "
+          f"{time.monotonic() - t0:.1f}s to init")
+    return server
+
+
+def async_router(server: EmbeddingServer, n: int = 256):
+    """Per-request async serving with a latency budget."""
+    stream = RequestStream(CtrDataConfig(
+        vocab_sizes=VOCABS, n_dense=server.cfg.n_dense, batch_size=256))
+    server.warm_caches(stream.id_batches(32, start_step=10_000))
+    server.reset_cache_stats()
+    score_fn = server.score_fn("full")          # hot cache in front
+    router = AsyncRouter(score_fn, DeadlineBatcher(
+        RouterConfig(max_batch=32, max_wait_s=0.010)))
+
+    async def main():
+        await router.start()
         t0 = time.monotonic()
-        fwd(params, b).block_until_ready()
-        lat.append((time.monotonic() - t0) * 1e3)
-    lat = np.sort(np.asarray(lat))
-    print(f"CTR serve batch=512: p50={lat[32]:.2f}ms "
-          f"p99={lat[int(len(lat)*0.99)-1]:.2f}ms "
-          f"({512/lat[32]*1e3:,.0f} samples/s at p50)")
+        scores = await asyncio.gather(*[
+            router.submit(stream.request_at(i), budget_s=0.025)
+            for i in range(n)])
+        dt = time.monotonic() - t0
+        await router.stop()
+        return scores, dt
+
+    scores, dt = asyncio.run(main())
+    stats = server.cache_stats("full")
+    print(f"router: {n} requests in {dt*1e3:.0f}ms "
+          f"({router.dispatched_batches} batches, "
+          f"cache hit rate {stats['hit_rate']:.0%}); "
+          f"first scores {[f'{float(s):.3f}' for s in scores[:4]]}")
+
+
+def replay_policies(server: EmbeddingServer):
+    """Deadline-aware vs fixed-size batching at equal offered load."""
+    base = ReplayConfig(n_requests=1024, rate_hz=2000.0, deadline_s=0.025,
+                        max_batch=32)
+    for policy in ("deadline", "fixed"):
+        server.reset_cache_stats()
+        row = run_cell(server, "full",
+                       dataclasses.replace(base, policy=policy),
+                       warm_batches=32)
+        print(f"replay full+{policy}: p50={row['p50_ms']:.1f}ms "
+              f"p99={row['p99_ms']:.1f}ms qps={row['qps']:.0f} "
+              f"miss={row['deadline_miss']} "
+              f"hit_rate={row.get('hit_rate', 0):.0%}")
 
 
 def retrieval():
@@ -72,5 +108,7 @@ def retrieval():
 
 
 if __name__ == "__main__":
-    ctr_serving()
+    server = build_server()
+    async_router(server)
+    replay_policies(server)
     retrieval()

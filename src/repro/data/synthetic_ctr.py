@@ -88,6 +88,51 @@ class CtrStream:
         return batch
 
 
+def poisson_arrivals(rate_hz: float, n: int, seed: int = 0) -> np.ndarray:
+    """Open-loop Poisson arrival process: ``n`` cumulative arrival times
+    (seconds, starting after t=0) at ``rate_hz`` mean offered load.
+
+    Deterministic in (rate, n, seed) — the serving replay's virtual
+    timeline (``repro.serve.replay``) depends on replayable arrivals the
+    same way ``batch_at`` depends on (seed, step).  Open-loop means
+    arrivals never wait on completions: offered load is a property of the
+    trace, not of the server, which is what makes p99-vs-policy
+    comparisons at "equal offered load" meaningful.
+    """
+    if rate_hz <= 0:
+        raise ValueError(f"rate_hz must be positive, got {rate_hz}")
+    rs = np.random.RandomState(seed % 2 ** 31)
+    return np.cumsum(rs.exponential(1.0 / rate_hz, size=n))
+
+
+class RequestStream:
+    """Per-request view over ``CtrStream``: request ``i`` is row
+    ``i % batch_size`` of ``batch_at(i // batch_size)`` with the label
+    stripped — the unit of traffic the serving router batches back up.
+    Deterministic in (cfg, i); the last underlying batch is memoized."""
+
+    def __init__(self, cfg: CtrDataConfig):
+        self.cfg = cfg
+        self._stream = CtrStream(cfg)
+        self._step = -1
+        self._batch: Optional[dict] = None
+
+    def request_at(self, i: int) -> dict:
+        step, row = divmod(int(i), self.cfg.batch_size)
+        if step != self._step:
+            self._step, self._batch = step, self._stream.batch_at(step)
+        return {k: v[row] for k, v in self._batch.items() if k != "label"}
+
+    def requests(self, n: int, start: int = 0) -> list:
+        return [self.request_at(i) for i in range(start, start + n)]
+
+    def id_batches(self, n_batches: int, start_step: int = 0) -> list:
+        """[B, F] sparse-id arrays for ``n_batches`` consecutive steps —
+        the cache-warming feed (``HotRowCache.warm``)."""
+        return [self._stream.batch_at(s)["sparse"]
+                for s in range(start_step, start_step + n_batches)]
+
+
 def retrieval_batch(cfg: CtrDataConfig, step: int, n_user_fields: int,
                     n_candidates: int) -> dict:
     """One query + a candidate set for retrieval-scoring cells."""

@@ -142,6 +142,22 @@ def _embed(params, cfg: RecsysConfig, sparse_ids: jnp.ndarray) -> jnp.ndarray:
     return emb.astype(cfg.compute_dtype)
 
 
+def _batch_emb(params, cfg: RecsysConfig, batch: dict) -> jnp.ndarray:
+    """[B, F, dim] field embeddings for ``batch`` — precomputed or looked
+    up.
+
+    A batch carrying ``"emb"`` bypasses the substrate lookup entirely:
+    the serving tier's hot-row cache (``serve/hot_cache.py``) gathers the
+    backend's own rows on the host (``cacheable_rows`` contract, bit-
+    identical to the device gather) and injects them here, so cached and
+    uncached scores agree to the bit.
+    """
+    emb = batch.get("emb")
+    if emb is not None:
+        return jnp.asarray(emb).astype(cfg.compute_dtype)
+    return _embed(params, cfg, batch["sparse"])
+
+
 def _dlrm_interaction(params, cfg: RecsysConfig, batch: dict,
                       bot: jnp.ndarray, serve: bool) -> jnp.ndarray:
     """[B, (F+1)·F/2] dot-interaction triangle of [bot; field embeddings].
@@ -152,7 +168,7 @@ def _dlrm_interaction(params, cfg: RecsysConfig, batch: dict,
     intermediate in HBM.  Everywhere else (training, substrates without a
     super-kernel, ZeRO-3 placement): the unfused lookup + dot_interaction.
     """
-    if serve and cfg.use_kernel:
+    if serve and cfg.use_kernel and "emb" not in batch:
         spec = cfg.embedding_spec()
         backend = get_backend(spec.kind)
         if backend.fused_serve is not None:
@@ -160,7 +176,7 @@ def _dlrm_interaction(params, cfg: RecsysConfig, batch: dict,
                                         batch["sparse"], bot)
             if inter is not None:
                 return inter
-    emb = _embed(params, cfg, batch["sparse"])
+    emb = _batch_emb(params, cfg, batch)
     feats = jnp.concatenate([bot[:, None, :], emb], axis=1)
     return dot_interaction_op(feats, use_kernel=cfg.use_kernel)
 
@@ -171,7 +187,10 @@ def forward(params, cfg: RecsysConfig, batch: dict,
 
     ``serve`` marks the inference hot path: forward-only fast paths (the
     fused serve super-kernel) may engage; training always takes the
-    general path.
+    general path.  A batch may carry precomputed ``"emb"`` [B, F, dim]
+    instead of (or alongside) ``"sparse"`` — the serving tier's hot-row
+    cache path (``serve/hot_cache.py``); it takes precedence over both
+    the substrate lookup and the fused serve kernel.
     """
     a = cfg.arch
     if a == "dlrm":
@@ -180,7 +199,7 @@ def forward(params, cfg: RecsysConfig, batch: dict,
         inter = _dlrm_interaction(params, cfg, batch, bot, serve)
         top_in = jnp.concatenate([bot, inter], axis=-1)
         return mlp_apply(params["top"], top_in)[:, 0]
-    emb = _embed(params, cfg, batch["sparse"])       # [B,F,D]
+    emb = _batch_emb(params, cfg, batch)             # [B,F,D]
     b, f, d = emb.shape
     flat = emb.reshape(b, f * d)
     if a == "autoint":

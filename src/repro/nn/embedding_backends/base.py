@@ -58,6 +58,16 @@ class EmbeddingBackend:
     #: means "no fused serve path" and consumers fall back to the unfused
     #: lookup → concat → dot_interaction ops (models/recsys.py score path)
     fused_serve = None
+    #: optional serving-tier hot-row-cache hook: a fetch-bound backend
+    #: overrides this with a method ``cacheable_rows(params, spec, field,
+    #: ids) -> [n, dim]`` float32 host rows that are BIT-IDENTICAL to what
+    #: ``lookup`` would gather for those ids in that field — the contract
+    #: ``serve/hot_cache.HotRowCache`` rests on for exact score parity.
+    #: ``None`` (the default) declines the cache: robe declines because the
+    #: whole array is already cache-resident (the paper's point — fronting
+    #: it with another cache would muddy the full-vs-robe comparison); tt
+    #: declines because its cost is the core contraction, not the fetch.
+    cacheable_rows = None
 
     # -- construction ------------------------------------------------------
 

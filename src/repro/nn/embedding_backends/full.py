@@ -66,6 +66,14 @@ class FullTableBackend(EmbeddingBackend):
         off = jnp.asarray(spec.offsets[list(fields)], jnp.int32)
         return jnp.take(params["table"], idx + off[None, :], axis=0)
 
+    def cacheable_rows(self, params, spec, field: int,
+                       ids: np.ndarray) -> np.ndarray:
+        """Hot-row-cache hook: the exact rows ``lookup`` would gather for
+        ``ids`` in ``field`` — a host-side copy of the same f32 bits, so a
+        cached serve score is bit-exact against the device gather."""
+        table = np.asarray(params["table"])
+        return table[np.asarray(ids, np.int64) + int(spec.offsets[field])]
+
     def lookup_dist(self, params, spec, idx, *, compute_dtype=None):
         from repro.dist import api as dist
         ctx = dist.current()

@@ -90,6 +90,20 @@ class HashedBackend(EmbeddingBackend):
         return qr_lookup(params["q_table"], params["r_table"], idx,
                          qo, ro, m, spec.use_kernel)
 
+    def cacheable_rows(self, params, spec, field: int,
+                       ids: np.ndarray) -> np.ndarray:
+        """Hot-row-cache hook: recompose Q[x//m] * R[x%m] on the host for
+        ``ids`` in ``field`` — same f32 elementwise product (single
+        rounding) as the jnp reference path, so cached serve scores stay
+        bit-exact.  Caching the *composed* row also skips the recomposition
+        multiply on every hot hit, not just the two fetches."""
+        m = _m(spec)
+        _, q_off, r_off = qr_layout(spec.vocab_sizes, m)
+        ids = np.asarray(ids, np.int64)
+        q = np.asarray(params["q_table"])
+        r = np.asarray(params["r_table"])
+        return q[ids // m + int(q_off[field])] * r[ids % m + int(r_off[field])]
+
     def param_specs(self, spec, rules, mesh=None) -> dict:
         # replicated on every mesh: a degraded mesh changes nothing, the
         # elastic restore just re-broadcasts both tables to the survivors

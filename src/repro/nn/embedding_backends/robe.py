@@ -51,6 +51,11 @@ def analytic_max_fetches(d: int, z: int, bus: int) -> float:
 class RobeBackend(EmbeddingBackend):
     name = "robe"
     local_batch = True           # lookups never exchange over `model`
+    #: declines the serving tier's hot-row cache, explicitly: the entire
+    #: ROBE array is cache-resident by construction — that IS the paper's
+    #: serving claim — so fronting it with a second exact-row cache would
+    #: only duplicate rows and muddy the full-vs-robe benchmark
+    cacheable_rows = None
 
     def validate(self, spec) -> None:
         if spec.robe is None:

@@ -1,0 +1,280 @@
+"""Skewed traffic replay: open-loop Poisson load against the serving tier.
+
+The measurement harness behind ``BENCH_serving.json``: replay a
+deterministic synthetic-CTR request trace (``data.synthetic_ctr``:
+zipf-skewed ids, Poisson arrivals) through a batching policy
+(``router.DeadlineBatcher`` vs ``router.FixedBatcher``) into a substrate
+of the ``EmbeddingServer``, and record p50/p99 latency, delivered
+throughput, shed counts, and hot-cache hit rate per backend × policy ×
+zipf cell.
+
+The replay runs on a **virtual clock** — the event loop advances time to
+the next arrival or forced batch close-out; nothing ever sleeps:
+
+* queueing/waiting time is simulated exactly (deterministic given the
+  trace and a service model), so tier-1 tests assert on latency
+  distributions to the float with ``service="synthetic"``;
+* with ``service="measured"`` each dispatched batch really executes the
+  jitted scorer and its wall time becomes the batch's service time on the
+  virtual timeline — real compute, simulated waiting.  This is how the
+  benchmark rows are produced: the percentiles combine measured service
+  with exactly-modeled queueing at the configured offered load, without
+  an hour of wall-clock replay (and without wall-clock sleeps in CI).
+
+Single-server semantics: dispatched batches execute in order on one
+model; a batch closed while the scorer is busy queues for the device.
+Open-loop arrivals never back off, so overload shows up as shed requests
+and rising p99 — the behaviour a p99 budget is supposed to bound.
+
+Layering: this module returns plain row dicts; the benchmarks layer
+(``benchmarks/table4_inference_throughput.serving_rows``) stamps them
+with provenance (``benchmarks.common.stamp_row``) and writes
+``BENCH_serving.json``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, List, Optional, Sequence
+
+import numpy as np
+
+from repro.data.synthetic_ctr import (CtrDataConfig, RequestStream,
+                                      poisson_arrivals)
+from repro.serve.router import (DeadlineBatcher, FixedBatcher,
+                                LoadShedError, RouterConfig, accepts_n_valid,
+                                stack_and_pad)
+from repro.serve.serving import percentile
+
+__all__ = ["ReplayConfig", "ReplayReport", "replay", "synthetic_service",
+           "measured_service", "make_batcher", "run_cell", "run_grid"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplayConfig:
+    """One replay cell: a trace plus a batching policy."""
+
+    n_requests: int = 2048
+    rate_hz: float = 2000.0            # offered load (open-loop)
+    deadline_s: Optional[float] = 0.025   # per-request budget (None: none)
+    policy: str = "deadline"           # "deadline" | "fixed"
+    max_batch: int = 32
+    max_queue: int = 256
+    max_wait_s: float = 0.050          # fixed policy's only close-out
+    init_service_s: float = 2e-3
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class ReplayReport:
+    p50_ms: float
+    p95_ms: float
+    p99_ms: float
+    qps: float                         # delivered (completed / makespan)
+    offered_qps: float
+    completed: int
+    shed: int
+    batches: int
+    mean_batch: float
+    makespan_s: float
+    deadline_miss: int                 # completed but past their deadline
+
+    def as_row(self) -> dict:
+        r = dataclasses.asdict(self)
+        for k in ("p50_ms", "p95_ms", "p99_ms"):
+            r[k] = round(r[k], 3)
+        r["qps"] = round(r["qps"], 1)
+        r["offered_qps"] = round(r["offered_qps"], 1)
+        r["mean_batch"] = round(r["mean_batch"], 2)
+        r["makespan_s"] = round(r["makespan_s"], 4)
+        return r
+
+
+# ---------------------------------------------------------------------------
+# service models
+# ---------------------------------------------------------------------------
+
+def synthetic_service(base_s: float = 1e-3,
+                      per_row_s: float = 1e-5) -> Callable:
+    """Deterministic affine service model — tier-1's clockwork scorer."""
+
+    def service(batch: dict, n_valid: int) -> float:
+        return base_s + per_row_s * n_valid
+
+    return service
+
+
+def measured_service(score_fn: Callable) -> Callable:
+    """Wrap a real scorer: execute the padded batch, return its wall time.
+
+    The scores themselves are discarded — parity is the cache tests' job;
+    the replay measures time.  The caller should run one warm-up batch
+    first so compile time never lands on the virtual timeline.
+    """
+    pass_valid = accepts_n_valid(score_fn)
+
+    def service(batch: dict, n_valid: int) -> float:
+        t0 = time.perf_counter()
+        out = score_fn(batch, n_valid=n_valid) if pass_valid \
+            else score_fn(batch)
+        np.asarray(out)                       # materialize before stamping
+        return time.perf_counter() - t0
+
+    return service
+
+
+def make_batcher(cfg: ReplayConfig) -> DeadlineBatcher:
+    rc = RouterConfig(max_batch=cfg.max_batch, max_queue=cfg.max_queue,
+                      max_wait_s=cfg.max_wait_s,
+                      init_service_s=cfg.init_service_s)
+    if cfg.policy == "deadline":
+        return DeadlineBatcher(rc)
+    if cfg.policy == "fixed":
+        return FixedBatcher(rc)
+    raise ValueError(f"unknown policy {cfg.policy!r}")
+
+
+# ---------------------------------------------------------------------------
+# the virtual-clock event loop
+# ---------------------------------------------------------------------------
+
+def replay(service: Callable, requests: Sequence[dict],
+           arrivals: np.ndarray, cfg: ReplayConfig,
+           batcher: Optional[DeadlineBatcher] = None) -> ReplayReport:
+    """Drive ``requests`` (arriving at ``arrivals``) through the batcher
+    into ``service``; returns the latency/throughput report.
+
+    ``service(batch, n_valid) -> seconds`` is the service-time model
+    (synthetic or measured).  Latency of request i = completion of its
+    batch − its arrival; shed requests are counted, not timed.
+    """
+    if len(requests) != len(arrivals):
+        raise ValueError("requests and arrivals must align")
+    batcher = batcher if batcher is not None else make_batcher(cfg)
+    lats: List[float] = []
+    sizes: List[int] = []
+    shed = 0
+    deadline_miss = 0
+    server_free = 0.0
+    i, n = 0, len(requests)
+    now = 0.0
+
+    def dispatch(reqs, close_time):
+        nonlocal server_free, deadline_miss
+        batch, n_valid = stack_and_pad([r.features for r in reqs],
+                                       cfg.max_batch)
+        svc = float(service(batch, n_valid))
+        start = max(close_time, server_free)
+        done = start + svc
+        server_free = done
+        batcher.observe(svc)
+        sizes.append(n_valid)
+        for r in reqs:
+            lats.append(done - r.arrival)
+            if r.deadline is not None and done > r.deadline:
+                deadline_miss += 1
+
+    while i < n or len(batcher):
+        t_close = batcher.close_at()
+        t_arr = arrivals[i] if i < n else None
+        events = [] if t_arr is None else [float(t_arr)]
+        if t_close is not None:
+            # a due batch can only start once the scorer frees up — the
+            # single-server semantics that let queue_full actually trip
+            events.append(max(t_close, server_free))
+        if not events:
+            break
+        now = max(now, min(events))
+        while i < n and arrivals[i] <= now:
+            t = float(arrivals[i])
+            deadline = None if cfg.deadline_s is None else t + cfg.deadline_s
+            try:
+                batcher.admit(requests[i], t, deadline=deadline)
+            except LoadShedError:
+                shed += 1
+            i += 1
+        while server_free <= now:
+            reqs = batcher.poll(now)
+            if reqs is None:
+                break
+            dispatch(reqs, now)
+
+    lat_ms = np.sort(np.asarray(lats)) * 1e3
+    makespan = max(server_free, float(arrivals[-1])) if len(lats) else 0.0
+    p = (lambda q: percentile(lat_ms, q)) if len(lat_ms) else (lambda q: 0.0)
+    return ReplayReport(
+        p50_ms=p(0.5), p95_ms=p(0.95), p99_ms=p(0.99),
+        qps=len(lats) / makespan if makespan else 0.0,
+        offered_qps=n / float(arrivals[-1]),
+        completed=len(lats), shed=shed, batches=len(sizes),
+        mean_batch=float(np.mean(sizes)) if sizes else 0.0,
+        makespan_s=makespan, deadline_miss=deadline_miss)
+
+
+# ---------------------------------------------------------------------------
+# the benchmark grid
+# ---------------------------------------------------------------------------
+
+def run_cell(server, backend: str, cfg: ReplayConfig, *,
+             zipf: float = 1.05, n_dense: Optional[int] = None,
+             warm_batches: int = 64, service: Optional[Callable] = None
+             ) -> dict:
+    """One benchmark cell: backend × policy × zipf on a measured scorer.
+
+    Warms the jit (one padded batch) and the hot cache (``warm_batches``
+    of prior traffic at the same skew) before the replay, so the recorded
+    percentiles and hit rate describe steady state.
+    """
+    data_cfg = CtrDataConfig(
+        vocab_sizes=server.cfg.vocab_sizes,
+        n_dense=server.cfg.n_dense if n_dense is None else n_dense,
+        batch_size=256, zipf_exponent=zipf, seed=cfg.seed + 7)
+    stream = RequestStream(data_cfg)
+    requests = stream.requests(cfg.n_requests)
+    arrivals = poisson_arrivals(cfg.rate_hz, cfg.n_requests, seed=cfg.seed)
+
+    cache = server.cache(backend)
+    if cache is not None:
+        cache.warm(stream.id_batches(warm_batches, start_step=10_000))
+    score_fn = server.score_fn(backend)
+    if service is None:
+        # compile outside the timeline, then measure the real scorer
+        batch, nv = stack_and_pad(requests[:1], cfg.max_batch)
+        score_fn(batch, n_valid=nv)
+        if cache is not None:
+            cache.reset_stats()           # warm-up call is not traffic
+        service = measured_service(score_fn)
+    rep = replay(service, requests, arrivals, cfg)
+    row = {"backend": backend, "policy": cfg.policy, "zipf": zipf,
+           "max_batch": cfg.max_batch,
+           "deadline_ms": (None if cfg.deadline_s is None
+                           else round(cfg.deadline_s * 1e3, 2)),
+           **rep.as_row()}
+    stats = server.cache_stats(backend)
+    if stats is not None:
+        row["hit_rate"] = stats["hit_rate"]
+        row["cache_resident"] = stats["resident_rows"]
+    return row
+
+
+def run_grid(server, *, policies: Sequence[str] = ("deadline", "fixed"),
+             zipfs: Sequence[float] = (1.05,),
+             backends: Optional[Sequence[str]] = None,
+             base: Optional[ReplayConfig] = None,
+             warm_batches: int = 64) -> List[dict]:
+    """backend × policy × zipf sweep; one row dict per cell.
+
+    Cache stats reset between cells so each row's hit rate is its own.
+    """
+    base = base if base is not None else ReplayConfig()
+    rows = []
+    for zipf in zipfs:
+        for backend in (backends if backends is not None
+                        else server.backends):
+            for policy in policies:
+                server.reset_cache_stats()
+                cell = dataclasses.replace(base, policy=policy)
+                rows.append(run_cell(server, backend, cell, zipf=zipf,
+                                     warm_batches=warm_batches))
+    return rows

@@ -1,0 +1,187 @@
+"""Multi-substrate embedding server: all four backends resident at once.
+
+One ``EmbeddingServer`` holds a DLRM scoring model per registered
+embedding substrate (full / robe / hashed / tt) resident on the same mesh
+— the same trained architecture, four interchangeable embedding layouts —
+and routes each request to its substrate through one jitted
+``serve_scores`` per backend (the fused ``serve_fused`` super-kernel path
+when ``use_kernel`` and the backend offers it; see
+``models/recsys._dlrm_interaction``).
+
+The fetch-bound substrates (``full``/``hashed``) are optionally fronted
+by a ``HotRowCache``: the server gathers their hot rows on the host
+(bit-exact by the ``cacheable_rows`` contract) and feeds the jitted
+scorer precomputed embeddings via the batch's ``"emb"`` key, so switching
+the cache on can never change a score.  ``robe`` declines the cache —
+the array is already cache-resident, which is the paper's serving claim
+and what keeps the full-vs-robe comparison honest.
+
+Batches arrive padded to the compiled shape with ``n_valid`` leading real
+rows (the router/``stack_and_pad`` contract): the scorer returns only the
+real rows, and the cache never counts the padded tail.
+
+Under an active ``repro.dist`` context the jitted scorers pick up the
+mesh through each backend's own ``lookup_dist``/``fused_serve`` bodies —
+the server adds no placement logic of its own.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.recsys import RecsysConfig, init_params, serve_scores
+from repro.nn.embeddings import get_backend
+from repro.serve.hot_cache import HotRowCache
+
+__all__ = ["ServerConfig", "EmbeddingServer"]
+
+DEFAULT_BACKENDS = ("full", "robe", "hashed", "tt")
+
+
+@dataclasses.dataclass(frozen=True)
+class ServerConfig:
+    """One scoring model per substrate, shared architecture.
+
+    ``robe_compression`` sizes the ROBE array at 1/compression of the full
+    table's parameters (the paper's 1000× knob, scaled to taste);
+    ``cache_capacity`` rows per cacheable substrate (0 disables the hot
+    cache); ``use_kernel`` routes robe serving through the one-pass
+    ``serve_fused`` super-kernel (interpret mode off-TPU — slow but
+    conformant, so benchmarks default it off on CPU).
+    """
+
+    vocab_sizes: Tuple[int, ...]
+    embed_dim: int = 16
+    n_dense: int = 8
+    bot_mlp: Tuple[int, ...] = ()        # () -> (64, embed_dim)
+    top_mlp: Tuple[int, ...] = (64, 1)
+    backends: Tuple[str, ...] = DEFAULT_BACKENDS
+    robe_compression: int = 1000
+    robe_block: int = 32
+    use_kernel: bool = False
+    cache_capacity: int = 16384
+    cache_admit_threshold: int = 1
+    sketch_width: int = 1 << 16
+    seed: int = 0
+
+    def recsys_cfg(self, backend: str) -> RecsysConfig:
+        bot = self.bot_mlp or (64, self.embed_dim)
+        n_emb = sum(self.vocab_sizes) * self.embed_dim
+        return RecsysConfig(
+            name=f"serve-{backend}", arch="dlrm",
+            vocab_sizes=self.vocab_sizes, embed_dim=self.embed_dim,
+            n_dense=self.n_dense, bot_mlp=bot, top_mlp=self.top_mlp,
+            embedding=backend,
+            robe_size=max(512, n_emb // self.robe_compression),
+            robe_block=self.robe_block, use_kernel=self.use_kernel)
+
+
+class EmbeddingServer:
+    """All substrates resident; ``score(backend, batch, n_valid)`` routes.
+
+    Each substrate gets its own parameters (one ``init_params`` per
+    backend off the same seed) and one jitted ``serve_scores``; the jit
+    cache keys on the batch's keys, so the cached path (``dense`` +
+    ``emb``) and the direct path (``dense`` + ``sparse``) are two traces
+    of the same callable.
+    """
+
+    def __init__(self, cfg: ServerConfig,
+                 params: Optional[Dict[str, dict]] = None):
+        self.cfg = cfg
+        self._cfgs: Dict[str, RecsysConfig] = {}
+        self._params: Dict[str, dict] = {}
+        self._jit: Dict[str, callable] = {}
+        self._caches: Dict[str, Optional[HotRowCache]] = {}
+        for i, name in enumerate(cfg.backends):
+            rc = cfg.recsys_cfg(name)
+            self._cfgs[name] = rc
+            self._params[name] = (params[name] if params is not None
+                                  else init_params(
+                                      jax.random.PRNGKey(cfg.seed + i), rc))
+            self._jit[name] = jax.jit(
+                lambda p, b, c=rc: serve_scores(p, c, b))
+            cache = None
+            if cfg.cache_capacity > 0:
+                # the cache gathers through the embedding-layer subtree —
+                # the same params ``_embed``'s lookup sees
+                cache = HotRowCache.for_backend(
+                    get_backend(name), rc.embedding_spec(),
+                    self._params[name]["embedding"],
+                    capacity=cfg.cache_capacity,
+                    sketch_width=cfg.sketch_width,
+                    admit_threshold=cfg.cache_admit_threshold,
+                    seed=cfg.seed)
+            self._caches[name] = cache
+
+    @property
+    def backends(self) -> Tuple[str, ...]:
+        return tuple(self.cfg.backends)
+
+    def recsys_config(self, backend: str) -> RecsysConfig:
+        return self._cfgs[backend]
+
+    def params(self, backend: str) -> dict:
+        return self._params[backend]
+
+    def cache(self, backend: str) -> Optional[HotRowCache]:
+        return self._caches[backend]
+
+    # -- scoring -----------------------------------------------------------
+
+    def score(self, backend: str, batch: Dict[str, np.ndarray],
+              n_valid: Optional[int] = None, *,
+              use_cache: bool = True) -> np.ndarray:
+        """Route one padded batch to ``backend``; returns [n_valid] scores.
+
+        ``batch``: ``{"dense": [B, n_dense], "sparse": [B, F]}`` (numpy or
+        jax).  With a hot cache resident for this substrate (and
+        ``use_cache``), the sparse gather happens host-side through the
+        cache and the jitted scorer receives precomputed ``"emb"`` — the
+        scores are bit-identical either way (``cacheable_rows`` contract).
+        """
+        if backend not in self._cfgs:
+            raise KeyError(f"backend {backend!r} not resident; serving: "
+                           f"{sorted(self._cfgs)}")
+        cache = self._caches[backend] if use_cache else None
+        if cache is not None:
+            emb = cache.lookup(np.asarray(batch["sparse"]), n_valid)
+            jb = {"dense": jnp.asarray(batch["dense"]),
+                  "emb": jnp.asarray(emb)}
+        else:
+            jb = {"dense": jnp.asarray(batch["dense"]),
+                  "sparse": jnp.asarray(batch["sparse"])}
+        out = np.asarray(self._jit[backend](self._params[backend], jb))
+        return out[:n_valid] if n_valid is not None else out
+
+    def score_fn(self, backend: str, *, use_cache: bool = True):
+        """A ``score_fn(batch, n_valid=...)`` closure for the router /
+        ``MicroBatcher`` / replay harness, bound to one substrate."""
+
+        def fn(batch, n_valid=None):
+            return self.score(backend, batch, n_valid, use_cache=use_cache)
+
+        fn.__name__ = f"score_{backend}"
+        return fn
+
+    # -- cache bookkeeping --------------------------------------------------
+
+    def cache_stats(self, backend: str) -> Optional[dict]:
+        cache = self._caches[backend]
+        return None if cache is None else cache.stats()
+
+    def warm_caches(self, id_batches: Sequence[np.ndarray]) -> None:
+        """Pre-heat every resident cache from prior traffic ids."""
+        for cache in self._caches.values():
+            if cache is not None:
+                cache.warm(id_batches)
+
+    def reset_cache_stats(self) -> None:
+        for cache in self._caches.values():
+            if cache is not None:
+                cache.reset_stats()

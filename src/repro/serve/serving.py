@@ -1,57 +1,121 @@
-"""Serving utilities: a latency-bounded micro-batcher and score servers.
+"""Serving utilities: sync micro-batching front-end + latency profiling.
 
-The dry-run covers the pod-scale serving shapes (serve_p99 / serve_bulk /
-retrieval_cand / prefill / decode); this module is the host-side glue a
-deployment wraps around the jitted step functions.
+The serving subsystem proper lives in the sibling modules — ``router``
+(deadline-aware async batching), ``hot_cache`` (frequency-sketch hot-row
+cache), ``server`` (multi-substrate ``EmbeddingServer``), ``replay``
+(virtual-clock traffic replay → ``BENCH_serving.json``).  This module
+keeps the synchronous conveniences:
+
+* ``MicroBatcher`` — a thin sync wrapper over the router's
+  ``DeadlineBatcher`` policy: same admission checks, same close-out
+  logic (``poll()`` dispatches only batches that are due; ``flush()``
+  force-closes everything), one shared padding path
+  (``router.stack_and_pad``), so sync and async serving can never drift.
+* ``latency_profile`` — steady-state percentiles of a jitted scoring
+  function, compile time reported separately.
 """
 
 from __future__ import annotations
 
-import dataclasses
+import math
 import time
-from typing import Callable, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.serve.router import (DeadlineBatcher, RouterConfig,
+                                accepts_n_valid, stack_and_pad)
 
-@dataclasses.dataclass
+__all__ = ["MicroBatcher", "latency_profile", "percentile"]
+
+
+def percentile(sorted_values, p: float) -> float:
+    """Nearest-rank percentile of an ascending-sorted sequence.
+
+    Rank is ``ceil(p·n)`` (1-indexed), i.e. index ``ceil(p·n) − 1`` — the
+    smallest value with at least a ``p`` fraction of the sample at or
+    below it.  (The old ``int(n·p)`` *index* overshoots the rank by one
+    wherever ``n·p`` is an integer: p50 of 4 samples read the 3rd.)
+    """
+    n = len(sorted_values)
+    if n == 0:
+        raise ValueError("percentile of an empty sample")
+    if not 0.0 < p <= 1.0:
+        raise ValueError(f"p must be in (0, 1], got {p}")
+    return float(sorted_values[max(0, math.ceil(p * n) - 1)])
+
+
 class MicroBatcher:
     """Collects requests into fixed-size batches (padding the tail) so the
-    jitted scoring function compiles once.  max_wait_ms bounds p99 latency.
-    """
-    batch_size: int
-    score_fn: Callable[[dict], np.ndarray]
-    max_wait_ms: float = 2.0
-    _queue: List[dict] = dataclasses.field(default_factory=list)
+    jitted scoring function compiles once; ``max_wait_ms`` bounds p99.
 
-    def submit(self, request: dict) -> None:
+    Sync front-end over the router's ``DeadlineBatcher``: ``submit``
+    admits (raising the policy's ``LoadShedError`` when the queue bound
+    trips), ``poll()`` dispatches only the batches the close-out logic
+    says are due, ``flush()`` force-closes everything.  The padded tail
+    repeats the last real row to keep the compiled shape, and the real
+    row count is threaded through: ``flush``/``poll`` slice the scores
+    back to real requests before returning them, and a ``score_fn`` that
+    accepts the ``n_valid`` keyword is told how many leading rows are
+    real — so no consumer, stateless or stateful, can mistake padded
+    scores for real ones.
+    """
+
+    def __init__(self, batch_size: int, score_fn: Callable[..., np.ndarray],
+                 max_wait_ms: float = 2.0, max_queue: int = 4096,
+                 clock: Callable[[], float] = time.monotonic):
+        self.batch_size = batch_size
+        self.score_fn = score_fn
+        self._pass_valid = accepts_n_valid(score_fn)
+        self._clock = clock
+        self._batcher = DeadlineBatcher(RouterConfig(
+            max_batch=batch_size, max_queue=max_queue,
+            max_wait_s=max_wait_ms / 1e3))
+
+    def __len__(self) -> int:
+        return len(self._batcher)
+
+    def submit(self, request: Dict[str, np.ndarray]) -> None:
         # reject at the door (a clear error naming the keys), not as a
         # KeyError deep in np.stack — and without poisoning the queue:
         # already-accepted requests stay servable
-        if self._queue and set(request) != set(self._queue[0]):
-            raise ValueError(
-                f"MicroBatcher: request keys {sorted(request)} != the "
-                f"queued batch's keys {sorted(self._queue[0])}; all "
-                f"requests in a batch must share the same feature keys")
-        self._queue.append(request)
+        if len(self._batcher):
+            have = set(self._batcher._pending[0].features)
+            if set(request) != have:
+                raise ValueError(
+                    f"MicroBatcher: request keys {sorted(request)} != the "
+                    f"queued batch's keys {sorted(have)}; all requests in "
+                    f"a batch must share the same feature keys")
+        self._batcher.admit(request, self._clock())
+
+    def _score(self, reqs) -> List[np.ndarray]:
+        batch, n = stack_and_pad([r.features for r in reqs],
+                                 self.batch_size)
+        jb = {k: jnp.asarray(v) for k, v in batch.items()}
+        if self._pass_valid:
+            scores = np.asarray(self.score_fn(jb, n_valid=n))
+        else:
+            scores = np.asarray(self.score_fn(jb))
+        return list(scores[:n])          # padded tail never escapes
+
+    def poll(self, now: Optional[float] = None) -> List[np.ndarray]:
+        """Score only the batches that are due (full, or past the
+        close-out the deadline logic computed); [] when none is."""
+        now = self._clock() if now is None else now
+        out: List[np.ndarray] = []
+        while True:
+            reqs = self._batcher.poll(now)
+            if reqs is None:
+                return out
+            out.extend(self._score(reqs))
 
     def flush(self) -> List[np.ndarray]:
+        """Force-close everything queued; per-request scores in order."""
         out: List[np.ndarray] = []
-        while self._queue:
-            chunk = self._queue[:self.batch_size]
-            self._queue = self._queue[self.batch_size:]
-            n = len(chunk)
-            batch = {k: np.stack([c[k] for c in chunk]) for k in chunk[0]}
-            if n < self.batch_size:          # pad to the compiled shape
-                pad = self.batch_size - n
-                batch = {k: np.concatenate(
-                    [v, np.repeat(v[-1:], pad, axis=0)]) for k, v in
-                    batch.items()}
-            scores = np.asarray(self.score_fn(
-                {k: jnp.asarray(v) for k, v in batch.items()}))
-            out.extend(scores[:n])
+        for reqs in self._batcher.drain():
+            out.extend(self._score(reqs))
         return out
 
 
@@ -63,6 +127,8 @@ def latency_profile(fn: Callable, batch: dict, iters: int = 32,
     and reported as ``compile_ms``, and ``warmup`` further iterations are
     discarded (dispatch caches, allocator churn), so the percentiles
     describe only the steady state a serving deployment actually sees.
+    Percentiles are nearest-rank (see ``percentile``): exact at small
+    ``iters`` instead of overshooting the rank.
     """
     jb = {k: jnp.asarray(v) for k, v in batch.items()}
     t0 = time.monotonic()
@@ -79,6 +145,5 @@ def latency_profile(fn: Callable, batch: dict, iters: int = 32,
         jax.tree.leaves(r)[0].block_until_ready()
         lats.append((time.monotonic() - t0) * 1e3)
     lats = np.sort(np.asarray(lats))
-    q = lambda p: float(lats[min(len(lats) - 1, int(len(lats) * p))])
-    return {"p50_ms": q(0.5), "p95_ms": q(0.95), "p99_ms": q(0.99),
-            "compile_ms": compile_ms}
+    return {"p50_ms": percentile(lats, 0.5), "p95_ms": percentile(lats, 0.95),
+            "p99_ms": percentile(lats, 0.99), "compile_ms": compile_ms}

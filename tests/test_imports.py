@@ -40,5 +40,7 @@ def test_sweep_covers_known_subsystems():
     names = set(_walk_modules())
     for expect in ("repro.dist.api", "repro.dist.param_specs",
                    "repro.kernels.ops", "repro.models.recsys",
-                   "repro.launch.cells", "repro.train.train_loop"):
+                   "repro.launch.cells", "repro.train.train_loop",
+                   "repro.serve.router", "repro.serve.hot_cache",
+                   "repro.serve.server", "repro.serve.replay"):
         assert expect in names, expect
