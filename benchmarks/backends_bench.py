@@ -3,7 +3,7 @@
 One row per registered ``EmbeddingBackend`` at smoke scale: trained
 parameter count, the backend's own cost model (bytes fetched / flops per
 batch), and measured CPU lookup throughput.  Substrates with a fused
-Pallas lookup (robe / hashed / tt) get a second row with the kernel path
+Pallas lookup (robe / hashed / tt / qrobe) get a second row with the kernel path
 forced on, so the fused-vs-jnp trajectory is recorded per commit — every
 row carries a ``kernel`` flag and a ``mode`` field ("jnp", "interpret",
 or "pallas" on a real TPU).  Off-TPU the kernel rows measure interpret
@@ -34,7 +34,7 @@ from repro.nn.embeddings import (EmbeddingSpec, backend_names,
 BENCH_VOCABS = (50_000, 20_000, 80_000, 5_000, 30_000, 1_000, 15_000, 400)
 DIM = 16
 #: substrates whose lookup has a fused Pallas kernel behind use_kernel
-KERNEL_KINDS = ("robe", "hashed", "tt")
+KERNEL_KINDS = ("robe", "hashed", "tt", "qrobe")
 OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
                         "BENCH_backends.json")
 

@@ -1,0 +1,115 @@
+#!/usr/bin/env python
+"""Bench-regression gate: diff a freshly generated bench record against the
+committed baseline and fail CI on silent degradation.
+
+Three failure classes (``compare`` returns one message per violation):
+
+* **missing rows** — a row name present in the baseline but absent from the
+  fresh record: a backend / serving cell silently dropped out of the sweep.
+  (New rows in the fresh record are fine — that's how a new backend lands,
+  its rows become baseline when the file is re-committed.)
+* **schema drift** — the same row name carries a different key set: a
+  metric was renamed or dropped without re-baselining.
+* **throughput regression** — a throughput metric (``lookups_per_s``,
+  ``samples_per_s``, ``qps``) dropped more than ``threshold`` (default
+  30%) relative to the baseline.  Only enforced when the two rows are
+  *provenance-comparable* — same ``platform``, ``interpret`` flag, and
+  ``jax_version`` — so a baseline recorded on different hardware or a JAX
+  upgrade never produces a spurious gate failure (the stamped provenance
+  exists exactly for this; see ``benchmarks/common.py:stamp_row``).
+
+Usage:  python benchmarks/check_bench.py \
+            --baseline /tmp/BENCH_backends.baseline.json \
+            --fresh BENCH_backends.json [--threshold 0.30]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import List
+
+#: metrics gated for regressions (higher is better); a row is checked on
+#: whichever of these it carries
+THROUGHPUT_KEYS = ("lookups_per_s", "samples_per_s", "qps")
+#: a baseline row constrains a fresh row only when these agree exactly
+PROVENANCE_KEYS = ("platform", "interpret", "jax_version")
+DEFAULT_THRESHOLD = 0.30
+
+
+def _comparable(a: dict, b: dict) -> bool:
+    return all(a.get(k) == b.get(k) for k in PROVENANCE_KEYS)
+
+
+def compare(baseline: List[dict], fresh: List[dict],
+            threshold: float = DEFAULT_THRESHOLD) -> List[str]:
+    """One message per violation; empty list = gate passes."""
+    failures: List[str] = []
+    fresh_by = {}
+    for row in fresh:
+        name = row.get("name")
+        if name is None:
+            failures.append("fresh row without a 'name' key "
+                            f"(keys: {sorted(row)})")
+            continue
+        fresh_by[name] = row
+    for row in baseline:
+        name = row.get("name")
+        if name is None:
+            failures.append("baseline row without a 'name' key "
+                            f"(keys: {sorted(row)})")
+            continue
+        new = fresh_by.get(name)
+        if new is None:
+            failures.append(f"{name}: row missing from fresh record")
+            continue
+        added = sorted(set(new) - set(row))
+        removed = sorted(set(row) - set(new))
+        if added or removed:
+            failures.append(f"{name}: schema drift (added={added}, "
+                            f"removed={removed})")
+            continue
+        if not _comparable(row, new):
+            # different machine / mode / jax — presence and schema were
+            # still checked above; throughput is not comparable
+            continue
+        for key in THROUGHPUT_KEYS:
+            base_v = row.get(key)
+            if not base_v:
+                continue
+            drop = 1.0 - new[key] / base_v
+            if drop > threshold:
+                failures.append(
+                    f"{name}: {key} dropped {drop:.0%} "
+                    f"({base_v:.0f} -> {new[key]:.0f}, "
+                    f"threshold {threshold:.0%})")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", required=True)
+    ap.add_argument("--fresh", required=True)
+    ap.add_argument("--threshold", type=float, default=DEFAULT_THRESHOLD)
+    args = ap.parse_args(argv)
+    with open(args.baseline) as fh:
+        baseline = json.load(fh)
+    with open(args.fresh) as fh:
+        fresh = json.load(fh)
+    failures = compare(baseline, fresh, args.threshold)
+    if failures:
+        print(f"bench gate FAILED ({len(failures)} violation(s) vs "
+              f"{args.baseline}):")
+        for msg in failures:
+            print(f"  - {msg}")
+        return 1
+    n_checked = sum(1 for r in baseline if r.get("name"))
+    print(f"bench gate OK: {n_checked} baseline rows present, schemas "
+          f"stable, no comparable throughput drop > "
+          f"{args.threshold:.0%}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

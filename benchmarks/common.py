@@ -5,14 +5,14 @@ DESIGN.md §6.4; relative full-vs-ROBE comparisons carry over)."""
 from __future__ import annotations
 
 import time
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.data.synthetic_ctr import CtrDataConfig, CtrStream
-from repro.models.recsys import RecsysConfig, forward, init_params, loss_fn
+from repro.models.recsys import (RecsysConfig, forward, init_params,
+                                 loss_fn, make_project_fn)
 from repro.train.metrics import auc
 from repro.train.optimizer import OptimizerConfig, make_optimizer
 from repro.train.train_loop import (TrainConfig, build_train_step,
@@ -61,7 +61,8 @@ def train_and_eval(cfg: RecsysConfig, steps: int, batch: int = 1024,
     params = init_params(jax.random.PRNGKey(seed), cfg)
     opt = make_optimizer(OptimizerConfig(kind=opt_kind, lr=lr))
     tc = TrainConfig(checkpoint_every=10 ** 9)
-    step_fn = build_train_step(lambda p, b: loss_fn(p, cfg, b), opt, tc)
+    step_fn = build_train_step(lambda p, b: loss_fn(p, cfg, b), opt, tc,
+                               project=make_project_fn(cfg))
     state = init_state(params, opt, tc)
     stream = CtrStream(CtrDataConfig(vocab_sizes=BENCH_VOCABS,
                                      n_dense=cfg.n_dense,

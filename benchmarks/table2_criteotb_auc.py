@@ -8,7 +8,6 @@ the iterations — is measured via steps-to-target."""
 
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import make_cfg, train_and_eval
 

@@ -31,7 +31,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import BENCH_VOCABS, make_cfg, stamp_row
 from repro.data.synthetic_ctr import CtrDataConfig, CtrStream

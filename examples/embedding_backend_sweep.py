@@ -14,7 +14,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.data.synthetic_ctr import CtrDataConfig, CtrStream
-from repro.models.recsys import RecsysConfig, forward, init_params, loss_fn
+from repro.models.recsys import (RecsysConfig, forward, init_params,
+                                 loss_fn, make_project_fn)
 from repro.nn.embeddings import backend_names
 from repro.train.metrics import auc
 from repro.train.optimizer import OptimizerConfig, make_optimizer
@@ -35,7 +36,8 @@ def train_one(kind: str, steps: int) -> dict:
     params = init_params(jax.random.PRNGKey(0), cfg)
     opt = make_optimizer(OptimizerConfig(kind="adagrad", lr=0.1))
     tc = TrainConfig(checkpoint_every=10 ** 9)
-    step_fn = build_train_step(lambda p, b: loss_fn(p, cfg, b), opt, tc)
+    step_fn = build_train_step(lambda p, b: loss_fn(p, cfg, b), opt, tc,
+                               project=make_project_fn(cfg))
     stream = CtrStream(CtrDataConfig(vocab_sizes=VOCABS, n_dense=4,
                                      batch_size=1024))
     rep = run(init_state(params, opt, tc), step_fn, stream.batch_at, steps,

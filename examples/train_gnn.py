@@ -6,7 +6,6 @@ training with the CSR neighbor sampler (the `minibatch_lg` pattern).
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.data.graphs import (CsrGraph, GraphSpec, NeighborSampler,
                                SamplerConfig)

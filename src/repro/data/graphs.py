@@ -8,7 +8,7 @@ All host-side numpy; batches are padded to static shapes for jit.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Tuple
+from typing import List, Tuple
 
 import numpy as np
 

@@ -30,7 +30,8 @@ import numpy as np
 from repro.core.robe import RobeSpec, robe_slots, robe_signs
 from repro.core import robe as _core
 from repro.kernels import ref as _ref
-from repro.kernels.robe_lookup import robe_lookup_pallas
+from repro.kernels.robe_lookup import (qrobe_lookup_pallas,
+                                       robe_lookup_pallas)
 from repro.kernels.dot_interaction import dot_interaction_pallas
 from repro.kernels.qr_lookup import qr_lookup_pallas
 from repro.kernels.serve_fused import serve_fused_pallas
@@ -81,6 +82,63 @@ def _lookup_bwd(table_ids, dim, spec, use_kernel, res, g):
 
 
 robe_lookup.defvjp(_lookup_fwd, _lookup_bwd)
+
+
+# ---------------------------------------------------------------------------
+# qrobe_lookup: int8 ROBE array + learned per-group f32 scales, dequantized
+# inside the kernel (ALPT-style quantization-aware training).  The scales
+# are real trainable leaves — the backward delivers their analytic gradient
+# (d out/d scale[g] = Σ codes·sign over the group's touched elements).  The
+# int8 codes get a float0 cotangent: integer leaves cannot carry float
+# tangents through jax.grad, so the straight-through update rides on the
+# qrobe backend's zero-valued f32 "delta" carrier (see
+# nn/embedding_backends/qrobe.py) and is folded back into the codes by the
+# backend's post-optimizer projection.
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def qrobe_lookup(codes: jnp.ndarray, scale: jnp.ndarray, rows: jnp.ndarray,
+                 table_ids: Tuple[int, ...], dim: int, spec: RobeSpec,
+                 group_log2: int, use_kernel: bool = False) -> jnp.ndarray:
+    """[B, F] int rows -> [B, F, dim] embeddings dequantized from the int8
+    ROBE array, delivered in ``scale.dtype`` (single-rounding contract)."""
+    if use_kernel:
+        return qrobe_lookup_pallas(codes, scale, rows, table_ids, dim, spec,
+                                   group_log2, interpret=not _on_tpu())
+    return _ref.qrobe_lookup_ref(codes, scale, rows,
+                                 jnp.asarray(table_ids, jnp.uint32), dim,
+                                 spec, group_log2)
+
+
+def _qrobe_fwd(codes, scale, rows, table_ids, dim, spec, group_log2,
+               use_kernel):
+    out = qrobe_lookup(codes, scale, rows, table_ids, dim, spec, group_log2,
+                       use_kernel)
+    return out, (codes, scale, rows)
+
+
+def _qrobe_bwd(table_ids, dim, spec, group_log2, use_kernel, res, g):
+    codes, scale, rows = res
+    tids = jnp.asarray(table_ids, jnp.uint32)[None, :]
+    slots = robe_slots(spec, tids, rows, dim)            # [B, F, dim]
+    g32 = g.astype(jnp.float32)
+    if spec.use_sign:
+        g32 = g32 * robe_signs(spec, tids, rows, dim)
+    # scale grad: d out/d scale[g] = codes_f32 at the element's slot — every
+    # touched element's (cotangent · code) accumulates into its group (f32
+    # accumulate, scale-dtype delivery, as in _lookup_bwd)
+    flat = slots.reshape(-1).astype(jnp.int32)
+    cvals = jnp.take(codes, flat, axis=0).astype(jnp.float32)
+    gidx = (slots.reshape(-1) >> group_log2).astype(jnp.int32)
+    gscale = jnp.zeros(scale.shape, jnp.float32
+                       ).at[gidx].add(g32.reshape(-1) * cvals)
+    # int8 codes: float0 cotangent (the only tangent type an integer primal
+    # may carry); the STE path runs through the backend's delta carrier
+    gcodes = np.zeros(codes.shape, jax.dtypes.float0)
+    return gcodes, gscale.astype(scale.dtype), None
+
+
+qrobe_lookup.defvjp(_qrobe_fwd, _qrobe_bwd)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))

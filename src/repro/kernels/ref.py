@@ -8,7 +8,8 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.core.robe import RobeSpec, robe_lookup as _core_lookup
+from repro.core.robe import (RobeSpec, robe_lookup as _core_lookup,
+                             robe_signs, robe_slots)
 
 
 def robe_lookup_ref(memory: jnp.ndarray, rows: jnp.ndarray,
@@ -16,6 +17,41 @@ def robe_lookup_ref(memory: jnp.ndarray, rows: jnp.ndarray,
                     spec: RobeSpec) -> jnp.ndarray:
     """[B, F] rows (+ per-field table ids) -> [B, F, dim] embeddings."""
     return _core_lookup(memory, spec, table_ids[None, :], rows, dim)
+
+
+def qrobe_dequant_ref(codes: jnp.ndarray, scale: jnp.ndarray,
+                      group_log2: int) -> jnp.ndarray:
+    """Materialize the f32 array an int8 ROBE substrate represents.
+
+    codes: [|M|] int8; scale: [ceil(|M| / 2**group_log2)] learned per-group
+    scales.  Slot s dequantizes as ``codes[s] · scale[s >> group_log2]`` —
+    computed entirely in f32 (scale upcast first), no intermediate rounding.
+    """
+    gidx = jnp.arange(codes.shape[0], dtype=jnp.int32) >> group_log2
+    return codes.astype(jnp.float32) * jnp.take(scale.astype(jnp.float32),
+                                                gidx, axis=0)
+
+
+def qrobe_lookup_ref(codes: jnp.ndarray, scale: jnp.ndarray,
+                     rows: jnp.ndarray, table_ids: jnp.ndarray, dim: int,
+                     spec: RobeSpec, group_log2: int) -> jnp.ndarray:
+    """The single-rounding int8-dequant contract for ``qrobe_lookup``.
+
+    [B, F] rows -> [B, F, dim]: gather int8 codes through the ROBE hash,
+    dequantize each element in f32 against its group's scale
+    (``codes_f32 · scale_f32[slot >> group_log2]``), apply the ±1 sign
+    hash, and round ONCE on delivery into ``scale.dtype`` (the activation
+    dtype — bf16 activations over int8 params included).
+    """
+    tids = jnp.asarray(table_ids, jnp.uint32)[None, :]
+    slots = robe_slots(spec, tids, rows, dim)             # [B, F, dim] uint32
+    c = jnp.take(codes, slots.astype(jnp.int32), axis=0).astype(jnp.float32)
+    s = jnp.take(scale.astype(jnp.float32),
+                 (slots >> group_log2).astype(jnp.int32), axis=0)
+    out = c * s
+    if spec.use_sign:
+        out = out * robe_signs(spec, tids, rows, dim)
+    return out.astype(scale.dtype)
 
 
 def dot_interaction_ref(feats: jnp.ndarray, self_interaction: bool = False

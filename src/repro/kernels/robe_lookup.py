@@ -32,7 +32,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.hashing import mul32, add64, mod_m31, split31
+from repro.core.hashing import add64, mul32
 from repro.core.robe import RobeSpec
 from repro.kernels.tiling import pad_batch, pick_batch_tile, round_up
 
@@ -134,6 +134,127 @@ def _general_kernel(spec: RobeSpec, dim: int,
         sg = _signs_tile(spec, table_ids, rows, dim)
         out = out * sg.astype(out.dtype)
     out_ref[...] = out
+
+
+def _q_aligned_kernel(spec: RobeSpec, dim: int, group_log2: int,
+                      out_dtype, rows_ref, tids_ref, mem_ref, scale_ref,
+                      out_ref):
+    """int8 aligned path: one contiguous code slice per (row, field), each
+    element dequantized in-register against its group's f32 scale before it
+    ever leaves the kernel — HBM sees 1 byte per weight, not 4."""
+    tb, f = rows_ref.shape
+    rows = rows_ref[...]
+    table_ids = tids_ref[...]
+    start, _ = _hash_rows(spec, table_ids, rows, dim)      # [TB, F] uint32
+    m = jnp.uint32(spec.size)
+    scale = scale_ref[...].astype(jnp.float32)
+    lane = jnp.arange(dim, dtype=jnp.uint32)
+
+    def body(r, _):
+        bi = r // f
+        fi = r % f
+        s = start[bi, fi]
+        vec = mem_ref[pl.dslice(s.astype(jnp.int32), dim)]  # int8 [dim]
+        # group index from the WRAPPED slot: the padded code array absorbs
+        # the circular wrap for the gather, but scale groups are defined on
+        # canonical slots in [0, |M|)
+        slot = (s + lane) % m
+        sv = jnp.take(scale, (slot >> group_log2).astype(jnp.int32), axis=0)
+        deq = vec.astype(jnp.float32) * sv
+        out_ref[pl.dslice(bi, 1), pl.dslice(fi, 1), :] = \
+            deq.astype(out_dtype).reshape(1, 1, dim)
+        return 0
+
+    jax.lax.fori_loop(0, tb * f, body, 0)
+    if spec.use_sign:
+        out_ref[...] = (out_ref[...] *
+                        _signs_tile(spec, table_ids, rows, dim
+                                    ).astype(out_dtype))
+
+
+def _q_general_kernel(spec: RobeSpec, dim: int, group_log2: int,
+                      out_dtype, rows_ref, tids_ref, mem_ref, scale_ref,
+                      out_ref):
+    """int8 general path (any Z): per-element slots, int8 gather, in-kernel
+    group-scale dequant.  Same slot math as ``_general_kernel``."""
+    rows = rows_ref[...]
+    table_ids = tids_ref[...]
+    rows_u = rows.astype(jnp.uint32)[..., None]
+    hi, lo = mul32(rows_u, jnp.uint32(dim))
+    shape = lo.shape[:-1] + (dim,)
+    hi = jnp.broadcast_to(hi, shape)
+    lo = jnp.broadcast_to(lo, shape)
+    i = jnp.broadcast_to(jnp.arange(dim, dtype=jnp.uint32), shape)
+    hi, lo = add64(hi, lo, i)
+    lz = spec.log2_z
+    if lz == 0:
+        b_hi, b_lo = hi, lo
+        off = jnp.zeros_like(lo)
+    else:
+        b_lo = (lo >> lz) | (hi << (32 - lz))
+        b_hi = hi >> lz
+        off = lo & jnp.uint32(spec.block_size - 1)
+    h = spec.hash_fn()
+    t = jnp.broadcast_to(table_ids[None, :, None], shape)
+    slot = h(t, b_hi, b_lo) + off
+    m = jnp.uint32(spec.size)
+    slot = jnp.where(slot >= m, slot - m, slot)
+    flat = slot.reshape(-1).astype(jnp.int32)
+    c = jnp.take(mem_ref[...], flat, axis=0).astype(jnp.float32)
+    sv = jnp.take(scale_ref[...].astype(jnp.float32),
+                  (slot.reshape(-1) >> group_log2).astype(jnp.int32), axis=0)
+    out = (c * sv).reshape(shape)
+    if spec.use_sign:
+        out = out * _signs_tile(spec, table_ids, rows, dim)
+    out_ref[...] = out.astype(out_dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "dim", "table_ids",
+                                             "group_log2", "interpret"))
+def qrobe_lookup_pallas(codes: jnp.ndarray, scale: jnp.ndarray,
+                        rows: jnp.ndarray, table_ids: Tuple[int, ...],
+                        dim: int, spec: RobeSpec, group_log2: int,
+                        interpret: bool = True) -> jnp.ndarray:
+    """Fused int8 ROBE lookup with in-kernel dequantization.
+
+    codes: [|M|] int8; scale: [ceil(|M| / 2**group_log2)] learned per-group
+    scales.  Same grid/tiling policy as ``robe_lookup_pallas``; the output
+    is delivered in ``scale.dtype`` under the single-rounding contract of
+    ``repro.kernels.ref.qrobe_lookup_ref``.
+    """
+    b, f = rows.shape
+    aligned = (spec.block_size % dim == 0)
+    tb = pick_batch_tile(b, f, dim)
+    b_pad = round_up(b, tb)
+    rows = pad_batch(rows, b_pad)
+    grid = (b_pad // tb,)
+    out_dtype = scale.dtype
+
+    if aligned:
+        pad = spec.block_size + dim
+        mem_in = jnp.concatenate([codes, codes[:pad]])
+        body = functools.partial(_q_aligned_kernel, spec, dim, group_log2,
+                                 out_dtype)
+    else:
+        mem_in = codes
+        body = functools.partial(_q_general_kernel, spec, dim, group_log2,
+                                 out_dtype)
+
+    tids = jnp.asarray(table_ids, dtype=jnp.uint32)
+    out = pl.pallas_call(
+        body,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tb, f), lambda i: (i, 0)),             # row ids
+            pl.BlockSpec((f,), lambda i: (0,)),                  # table ids
+            pl.BlockSpec((mem_in.shape[0],), lambda i: (0,)),    # int8 codes
+            pl.BlockSpec((scale.shape[0],), lambda i: (0,)),     # scales
+        ],
+        out_specs=pl.BlockSpec((tb, f, dim), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b_pad, f, dim), out_dtype),
+        interpret=interpret,
+    )(rows, tids, mem_in, scale)
+    return out[:b] if b_pad != b else out
 
 
 @functools.partial(jax.jit, static_argnames=("spec", "dim", "table_ids",

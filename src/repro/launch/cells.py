@@ -233,11 +233,20 @@ def build_recsys_cell(arch_id: str, shape_name: str, ctx,
                       "step": P()}
         bshape, bspec = _recsys_batch(cfg, b, ctx, flat_axes)
 
+        # quantized substrates (qrobe): int8 leaves pass through grad with
+        # float0 cotangents (allow_int; the optimizer's frozen-leaf wrapper
+        # skips them) and the backend's post-step projection folds the
+        # float update back into the stored codes
+        proj = R.make_project_fn(cfg)
+
         def step(state, batch):
             loss, grads = jax.value_and_grad(
-                lambda p: R.loss_fn(p, cfg, batch)[0])(state["params"])
+                lambda p: R.loss_fn(p, cfg, batch)[0],
+                allow_int=True)(state["params"])
             new_p, new_o = opt.update(state["params"], grads, state["opt"],
                                       state["step"])
+            if proj is not None:
+                new_p = proj(new_p)
             return {"params": new_p, "opt": new_o,
                     "step": state["step"] + 1}, loss
 
@@ -299,7 +308,6 @@ def build_gnn_cell(arch_id: str, shape_name: str, ctx,
     cell_id = f"{arch_id}/{shape_name}"
     cfg = bundle.make_config("full", shape=shape_name)
     dp = _dp(ctx)
-    n_dev = int(np.prod(list(ctx.mesh.shape.values())))
     opt = make_optimizer(OptimizerConfig(kind="adam", lr=1e-3))
 
     pshapes = jax.eval_shape(functools.partial(G.init_params, cfg=cfg),

@@ -21,7 +21,7 @@ ROBE applicability: none for the float-feature cells (see DESIGN.md §5);
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

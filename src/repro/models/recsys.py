@@ -11,7 +11,7 @@ Outputs are logits [B] (CTR models) or (user_vec, item_vec) (two-tower).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -248,7 +248,6 @@ def loss_fn(params, cfg: RecsysConfig, batch: dict) -> Tuple[jnp.ndarray,
     if cfg.arch == "two_tower":
         u, v = tower_vectors(params, cfg, batch)
         logits = (u @ v.T) * 20.0               # in-batch sampled softmax
-        labels = jnp.arange(u.shape[0])
         lse = jax.nn.logsumexp(logits, axis=-1)
         gold = jnp.diag(logits)
         loss = (lse - gold).mean()
@@ -258,6 +257,27 @@ def loss_fn(params, cfg: RecsysConfig, batch: dict) -> Tuple[jnp.ndarray,
     ce = jnp.mean(jnp.maximum(logits, 0) - logits * y
                   + jnp.log1p(jnp.exp(-jnp.abs(logits))))
     return ce, {"logloss": ce}
+
+
+def make_project_fn(cfg: RecsysConfig):
+    """Post-optimizer projection for the model's params, or None.
+
+    Backends whose stored parameters are not what the math sees (``qrobe``:
+    int8 codes behind a learned dequant) expose ``EmbeddingBackend.
+    project``; this lifts it from the embedding subtree to the full param
+    dict so ``build_train_step(project=...)`` (and the launch cells' inline
+    step closures) can apply it after every update.  Float substrates
+    return None and train loops skip the hook entirely.
+    """
+    spec = cfg.embedding_spec()
+    backend = get_backend(spec.kind)
+    if backend.project is None:
+        return None
+
+    def project(params):
+        return dict(params,
+                    embedding=backend.project(params["embedding"], spec))
+    return project
 
 
 def serve_scores(params, cfg: RecsysConfig, batch: dict) -> jnp.ndarray:

@@ -12,7 +12,7 @@ layer big (critical for compile time and for the 61-layer / 384-expert cell).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional, Tuple
+from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -21,8 +21,7 @@ from repro.core.robe import RobeSpec, init_memory, robe_lookup
 from repro.dist import api as dist
 from repro.nn.attention import (AttnConfig, attention_apply, attention_init,
                                 init_cache as attn_init_cache)
-from repro.nn.core import dense_apply, dense_init, normal_init, \
-    rms_norm_apply, rms_norm_init
+from repro.nn.core import normal_init, rms_norm_apply, rms_norm_init
 from repro.nn.moe import MoeConfig, moe_apply_dense, moe_apply_ep, moe_init, \
     moe_param_specs
 
@@ -177,7 +176,6 @@ def init_params(key, cfg: TransformerConfig) -> dict:
     else:
         params["embed"] = {"table": normal_init(
             ke, (cfg.vocab_padded, cfg.d_model), 0.02)}
-    n_scan = cfg.n_layers - cfg.first_k_dense
     keys = jax.random.split(kl, cfg.n_layers)
     if cfg.first_k_dense:
         params["dense_layers"] = [
@@ -219,7 +217,6 @@ def _embed(params, cfg: TransformerConfig, tokens: jnp.ndarray) -> jnp.ndarray:
             # body moves one bf16 activation-sized reduce instead.
             from jax.sharding import PartitionSpec as P
             dp = ctx.rules.get("batch")
-            dp_t = (dp,) if isinstance(dp, str) else tuple(dp)
             rows = v // n_model
             scatter_ok = t % n_model == 0
 

@@ -16,7 +16,6 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.dist.api import shard
 from repro.nn.core import dense_apply, dense_init, rms_norm_apply, \
     rms_norm_init
 

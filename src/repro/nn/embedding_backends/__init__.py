@@ -9,6 +9,8 @@ package registers the four shipped substrates:
                sharded ZeRO-3 style with ``placement="model"``)
 * ``hashed`` — QR compositional hashing-trick baseline
 * ``tt``     — tensor-train factorized tables (TT-Rec baseline)
+* ``qrobe``  — the ROBE array stored as int8 + learned per-group scales,
+               dequantized inside the lookup kernel (ALPT-style QAT)
 
 See ``base.py`` for the protocol and ``repro.nn.embeddings`` for the
 spec + convenience wrappers the models call.
@@ -21,6 +23,7 @@ from repro.nn.embedding_backends import full as _full        # noqa: F401
 from repro.nn.embedding_backends import robe as _robe        # noqa: F401
 from repro.nn.embedding_backends import hashed as _hashed    # noqa: F401
 from repro.nn.embedding_backends import tt as _tt            # noqa: F401
+from repro.nn.embedding_backends import qrobe as _qrobe      # noqa: F401
 from repro.nn.embedding_backends.full import full_lookup_sharded_body
 from repro.nn.embedding_backends.robe import (analytic_max_fetches,
                                               robe_allgather_body)

@@ -34,7 +34,6 @@ from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
 
 # canonical axis-normalization helpers live in dist.api (the spec trees
@@ -68,6 +67,16 @@ class EmbeddingBackend:
     #: it with another cache would muddy the full-vs-robe comparison); tt
     #: declines because its cost is the core contraction, not the fetch.
     cacheable_rows = None
+    #: optional post-optimizer projection hook: a backend whose stored
+    #: parameters are NOT what the math sees (quantized substrates —
+    #: ``qrobe``'s int8 codes behind a learned dequant) overrides this with
+    #: a method ``project(params, spec) -> params`` that folds the
+    #: optimizer's float update back into the stored representation after
+    #: every step (ALPT's dequantize → update → requantize cycle).  ``None``
+    #: means "parameters are their own representation" and train loops skip
+    #: the call (``repro.train.train_loop.build_train_step(project=...)``,
+    #: wired via ``repro.models.recsys.make_project_fn``).
+    project = None
 
     # -- construction ------------------------------------------------------
 

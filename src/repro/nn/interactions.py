@@ -13,8 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.ops import dot_interaction
-from repro.nn.core import dense_apply, dense_init, layer_norm_apply, \
-    layer_norm_init
+from repro.nn.core import dense_apply, dense_init
 
 
 # ---------------------------------------------------------------------------

@@ -18,7 +18,7 @@ Aux load-balance loss: Switch-style  E · Σ_e f_e · p̄_e.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -132,7 +132,6 @@ def moe_apply_ep(p, cfg: MoeConfig, x: jnp.ndarray, model_axis: str = "model",
                               jnp.cumsum(counts)[:-1]])
     pos = jnp.arange(n_slots, dtype=jnp.int32) - starts[ea_s].astype(jnp.int32)
     keep = pos < cap
-    dropped = (~keep).sum()
 
     send = jnp.zeros((e, cap, d), x.dtype)
     send = send.at[ea_s, jnp.where(keep, pos, cap)].set(

@@ -17,7 +17,6 @@ param/opt-state shardings in the launcher (see configs), not here.
 
 from __future__ import annotations
 
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

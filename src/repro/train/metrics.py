@@ -19,7 +19,6 @@ def auc(labels: np.ndarray, scores: np.ndarray) -> float:
     ranks = np.empty_like(order, dtype=np.float64)
     sorted_scores = scores[order]
     i = 0
-    r = 1.0
     while i < len(sorted_scores):
         j = i
         while j + 1 < len(sorted_scores) and \

@@ -9,7 +9,7 @@ API:  opt = make_optimizer(cfg);  state = opt.init(params);
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
@@ -63,6 +63,39 @@ def _clip(grads, max_norm: float):
     return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
 
 
+def _frozen_aware(update: Callable) -> Callable:
+    """Make an optimizer update tolerate non-differentiable leaves.
+
+    Quantized substrates carry integer parameters (``qrobe``'s int8 codes):
+    ``jax.grad(..., allow_int=True)`` gives them float0 cotangents, and no
+    elementwise update rule applies — they change only through the
+    backend's post-step ``project`` hook.  Leaves whose param dtype is not
+    inexact (or whose grad is float0) are *frozen*: the inner update sees
+    f32 zeros for both, and the original leaf is restored on the way out.
+    The frozen/live split is static (dtypes only), so this adds nothing to
+    the jitted computation when every leaf is an ordinary float.
+    """
+    def wrapped(params, grads, state, step):
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        frozen = [(not jnp.issubdtype(p.dtype, jnp.inexact))
+                  or getattr(g, "dtype", None) == jax.dtypes.float0
+                  for p, g in zip(flat_p, flat_g)]
+        if not any(frozen):
+            return update(params, grads, state, step)
+        z = [jnp.zeros(p.shape, jnp.float32) if f else None
+             for p, f in zip(flat_p, frozen)]
+        sub_p = tdef.unflatten(
+            [zz if f else p for p, f, zz in zip(flat_p, frozen, z)])
+        sub_g = tdef.unflatten(
+            [zz if f else g for g, f, zz in zip(flat_g, frozen, z)])
+        new_p, new_s = update(sub_p, sub_g, state, step)
+        out = [p if f else np_ for p, np_, f
+               in zip(flat_p, tdef.flatten_up_to(new_p), frozen)]
+        return tdef.unflatten(out), new_s
+    return wrapped
+
+
 def make_optimizer(cfg: OptimizerConfig) -> Optimizer:
     k = cfg.kind
 
@@ -88,7 +121,7 @@ def make_optimizer(cfg: OptimizerConfig) -> Optimizer:
             params = jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype),
                                   params, grads)
             return params, state
-        return Optimizer(cfg, init, update)
+        return Optimizer(cfg, init, _frozen_aware(update))
 
     if k == "adagrad":
         def init(params):
@@ -108,7 +141,7 @@ def make_optimizer(cfg: OptimizerConfig) -> Optimizer:
                 / (jnp.sqrt(vv.astype(jnp.float32)) + cfg.eps),
                 params, grads, v)
             return params, {"v": v}
-        return Optimizer(cfg, init, update)
+        return Optimizer(cfg, init, _frozen_aware(update))
 
     if k in ("adam", "adamw"):
         def init(params):
@@ -164,7 +197,7 @@ def make_optimizer(cfg: OptimizerConfig) -> Optimizer:
             if cfg.master_weights:
                 st["master"] = new_master
             return new_params, st
-        return Optimizer(cfg, init, update)
+        return Optimizer(cfg, init, _frozen_aware(update))
 
     if k == "adafactor":
         # factored second moment (rows/cols) for ≥2D params; first moment off
@@ -205,6 +238,6 @@ def make_optimizer(cfg: OptimizerConfig) -> Optimizer:
             out = [upd(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
             params = tdef.unflatten([o[0] for o in out])
             return params, {"f": tdef.unflatten([o[1] for o in out])}
-        return Optimizer(cfg, init, update)
+        return Optimizer(cfg, init, _frozen_aware(update))
 
     raise ValueError(f"unknown optimizer {k}")

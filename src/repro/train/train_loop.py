@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -49,16 +49,32 @@ class TrainConfig:
 
 
 def build_train_step(loss_fn: Callable, optimizer: Optimizer,
-                     cfg: TrainConfig) -> Callable:
-    """loss_fn(params, batch) -> (loss, metrics dict of scalars)."""
+                     cfg: TrainConfig,
+                     project: Optional[Callable] = None) -> Callable:
+    """loss_fn(params, batch) -> (loss, metrics dict of scalars).
+
+    ``project`` (optional): applied to params after every optimizer update —
+    the quantized-substrate requantization hook (a backend whose stored
+    parameters are not what the math sees folds the float update back in;
+    see ``EmbeddingBackend.project`` / ``repro.models.recsys.
+    make_project_fn``).  ``allow_int=True`` on the grad calls lets integer
+    leaves (int8 codes) flow through with float0 cotangents; the float0-
+    aware guards below and the optimizer's frozen-leaf wrapper keep them
+    out of the arithmetic.
+    """
 
     def grads_of(params, batch):
         if cfg.grad_accum > 1:
             def micro(carry, mb):
                 (l, g) = jax.value_and_grad(
-                    lambda p: loss_fn(p, mb)[0])(params)
-                return (carry[0] + l,
-                        jax.tree.map(jnp.add, carry[1], g)), None
+                    lambda p: loss_fn(p, mb)[0], allow_int=True)(params)
+                # float0 cotangents (integer leaves) never enter the f32
+                # accumulator — they stay float0 on the way out via the
+                # same dtype test the optimizer freeze uses
+                acc = jax.tree.map(
+                    lambda a, gg: a if gg.dtype == jax.dtypes.float0
+                    else jnp.add(a, gg), carry[1], g)
+                return (carry[0] + l, acc), None
             zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
                                 params)
             mbs = jax.tree.map(
@@ -68,8 +84,8 @@ def build_train_step(loss_fn: Callable, optimizer: Optimizer,
             (loss, grads), _ = jax.lax.scan(micro, (0.0, zero), mbs)
             inv = 1.0 / cfg.grad_accum
             return loss * inv, jax.tree.map(lambda g: g * inv, grads)
-        loss, grads = jax.value_and_grad(lambda p: loss_fn(p, batch)[0]
-                                         )(params)
+        loss, grads = jax.value_and_grad(lambda p: loss_fn(p, batch)[0],
+                                         allow_int=True)(params)
         return loss, grads
 
     def step_fn(state, batch):
@@ -101,15 +117,22 @@ def build_train_step(loss_fn: Callable, optimizer: Optimizer,
         else:
             loss, grads = grads_of(params, batch)
 
-        # NaN guard: skip the update if any grad is non-finite
+        # NaN guard: skip the update if any grad is non-finite (float0
+        # cotangents carry no values to inspect)
         finite = jnp.isfinite(loss)
         for g in jax.tree.leaves(grads):
+            if g.dtype == jax.dtypes.float0:
+                continue
             finite &= jnp.all(jnp.isfinite(g))
         new_params, new_opt = optimizer.update(params, grads, opt_state, step)
         params = jax.tree.map(
             lambda new, old: jnp.where(finite, new, old), new_params, params)
         opt_state = jax.tree.map(
             lambda new, old: jnp.where(finite, new, old), new_opt, opt_state)
+        if project is not None:
+            # requantization fold (ALPT): idempotent on a skipped update —
+            # a between-steps state projects to itself
+            params = project(params)
         state = dict(state, params=params, opt=opt_state, step=step + 1)
         return state, {"loss": loss, "finite": finite.astype(jnp.float32)}
 

@@ -4,7 +4,6 @@ MLA absorbed decode == expanded form."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.models.transformer import (TransformerConfig, decode_step,
                                       forward, init_cache, init_params)

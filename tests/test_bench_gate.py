@@ -1,0 +1,124 @@
+"""The CI bench-regression gate (benchmarks/check_bench.py): a deliberately
+mutated baseline must fail, matched records must pass, and provenance
+mismatches must disarm the throughput check without disarming the
+row-presence / schema checks."""
+
+import copy
+import importlib.util
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+GATE = REPO / "benchmarks" / "check_bench.py"
+
+_spec = importlib.util.spec_from_file_location("check_bench", GATE)
+check_bench = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(check_bench)
+compare = check_bench.compare
+
+
+def _rows():
+    return [
+        {"name": "backends/robe", "lookups_per_s": 1_000_000, "params": 3222,
+         "platform": "cpu", "interpret": False, "jax_version": "0.4.37"},
+        {"name": "backends/qrobe", "lookups_per_s": 900_000, "params": 4112,
+         "platform": "cpu", "interpret": False, "jax_version": "0.4.37"},
+        {"name": "serving/robe+deadline", "qps": 2000.0,
+         "platform": "cpu", "interpret": False, "jax_version": "0.4.37"},
+    ]
+
+
+def test_identical_records_pass():
+    assert compare(_rows(), _rows()) == []
+
+
+def test_small_jitter_within_threshold_passes():
+    fresh = _rows()
+    fresh[0]["lookups_per_s"] = int(1_000_000 * 0.75)    # −25% < 30% gate
+    assert compare(_rows(), fresh) == []
+
+
+def test_mutated_baseline_fails_throughput_gate():
+    """The acceptance drill: inflate the committed baseline so the fresh
+    run shows a >30% drop — the gate must fire."""
+    baseline = _rows()
+    baseline[0]["lookups_per_s"] = 10_000_000            # fresh is 10× lower
+    failures = compare(baseline, _rows())
+    assert len(failures) == 1
+    assert "backends/robe" in failures[0]
+    assert "lookups_per_s" in failures[0]
+
+
+def test_missing_row_fails():
+    fresh = [r for r in _rows() if r["name"] != "backends/qrobe"]
+    failures = compare(_rows(), fresh)
+    assert any("backends/qrobe" in f and "missing" in f for f in failures)
+
+
+def test_new_fresh_rows_are_allowed():
+    """A new backend's rows appear in fresh first; they become baseline on
+    the next commit — never a failure."""
+    fresh = _rows() + [{"name": "backends/int4", "lookups_per_s": 1,
+                        "platform": "cpu", "interpret": False,
+                        "jax_version": "0.4.37"}]
+    assert compare(_rows(), fresh) == []
+
+
+def test_schema_drift_fails():
+    fresh = copy.deepcopy(_rows())
+    del fresh[1]["params"]
+    fresh[1]["param_count"] = 4112
+    failures = compare(_rows(), fresh)
+    assert len(failures) == 1
+    assert "schema drift" in failures[0]
+    assert "param_count" in failures[0] and "params" in failures[0]
+
+
+def test_provenance_mismatch_disarms_throughput_only():
+    """Baseline from another platform / jax version: a huge drop is NOT a
+    failure (not comparable), but the row must still exist with the same
+    schema."""
+    fresh = copy.deepcopy(_rows())
+    fresh[0]["lookups_per_s"] = 1                        # −99.9999%
+    fresh[0]["jax_version"] = "0.5.0"
+    assert compare(_rows(), fresh) == []
+    # … but deleting the row still fails even across provenance
+    fresh = [r for r in copy.deepcopy(_rows()) if r["name"] != "backends/robe"]
+    for r in fresh:
+        r["jax_version"] = "0.5.0"
+    assert any("missing" in f for f in compare(_rows(), fresh))
+
+
+def test_cli_exit_codes(tmp_path):
+    """End-to-end through the CLI the CI step invokes: committed-style
+    records pass (exit 0), a mutated baseline fails (exit 1) and names the
+    violation on stdout."""
+    rows = _rows()
+    base, fresh = tmp_path / "base.json", tmp_path / "fresh.json"
+    fresh.write_text(json.dumps(rows))
+    base.write_text(json.dumps(rows))
+    ok = subprocess.run([sys.executable, str(GATE), "--baseline", str(base),
+                         "--fresh", str(fresh)], capture_output=True,
+                        text=True)
+    assert ok.returncode == 0, ok.stdout + ok.stderr
+    assert "bench gate OK" in ok.stdout
+
+    mutated = copy.deepcopy(rows)
+    mutated[2]["qps"] = 1e9                              # fresh 2000 ≪ 1e9
+    base.write_text(json.dumps(mutated))
+    bad = subprocess.run([sys.executable, str(GATE), "--baseline", str(base),
+                          "--fresh", str(fresh)], capture_output=True,
+                         text=True)
+    assert bad.returncode == 1
+    assert "serving/robe+deadline" in bad.stdout and "qps" in bad.stdout
+
+
+def test_gate_accepts_committed_baselines_against_themselves():
+    """The committed BENCH files are valid gate inputs (self-comparison
+    passes) — guards the gate itself against schema rot."""
+    for fname in ("BENCH_backends.json", "BENCH_serving.json"):
+        path = REPO / fname
+        rows = json.loads(path.read_text())
+        assert compare(rows, rows) == []

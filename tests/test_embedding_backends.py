@@ -10,16 +10,17 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.robe import RobeSpec, robe_lookup as robe_lookup_core
 from repro.kernels.ref import qr_materialize_ref, tt_materialize_ref
+from repro.nn.embedding_backends.qrobe import _expand
 from repro.nn.embeddings import (EmbeddingSpec, backend_names,
                                  embedding_init, embedding_lookup,
                                  embedding_lookup_bag, get_backend)
 
 VOCABS = (40, 24, 64)
 DIM = 8
-BACKENDS = ("full", "robe", "hashed", "tt")
+BACKENDS = ("full", "robe", "hashed", "tt", "qrobe")
 #: substrates with a fused Pallas lookup kernel — their parity/gradient
 #: cases run twice, kernel off (jnp path) and on (interpret mode)
-KERNEL_BACKENDS = ("robe", "hashed", "tt")
+KERNEL_BACKENDS = ("robe", "hashed", "tt", "qrobe")
 KIND_KERNEL = [(k, False) for k in BACKENDS] + \
     [(k, True) for k in KERNEL_BACKENDS]
 
@@ -50,10 +51,36 @@ def _reference_table(params: dict, spec: EmbeddingSpec) -> jnp.ndarray:
     if spec.kind == "tt":
         return tt_materialize_ref(params["core0"], params["core1"],
                                   params["core2"])[:spec.total_rows]
+    if spec.kind == "qrobe":
+        # dequantize the whole array (codes·scale + the straight-through
+        # delta carrier), then read it through the core ROBE lookup — the
+        # same independent path the float robe case uses
+        memory = (params["codes"].astype(jnp.float32)
+                  * _expand(params["scale"], params["codes"].shape[0])
+                  + params["delta"].astype(jnp.float32))
+        rows = jnp.arange(spec.total_rows, dtype=jnp.int32)
+        tids = np.repeat(np.arange(spec.n_fields, dtype=np.uint32),
+                         np.asarray(spec.vocab_sizes))
+        local = rows - jnp.asarray(spec.offsets, jnp.int32)[tids]
+        return robe_lookup_core(memory, spec.robe, jnp.asarray(tids),
+                                local, spec.dim)
     raise AssertionError(spec.kind)
 
 
-def test_registry_returns_all_four():
+def _max_grad_err(ga, gb):
+    """Max abs difference across grad trees, skipping float0 leaves (the
+    int8 code cotangents — both paths must agree those are gradient-free,
+    which the zip-dtype check below enforces)."""
+    errs = [0.0]
+    for a, b in zip(jax.tree.leaves(ga), jax.tree.leaves(gb)):
+        if a.dtype == jax.dtypes.float0 or b.dtype == jax.dtypes.float0:
+            assert a.dtype == b.dtype
+            continue
+        errs.append(float(jnp.max(jnp.abs(a - b))))
+    return max(errs)
+
+
+def test_registry_returns_all_registered():
     for name in BACKENDS:
         assert get_backend(name).name == name
     assert set(BACKENDS) <= set(backend_names())
@@ -94,11 +121,9 @@ def test_grad_matches_reference(kind, use_kernel):
     def loss_reference(p):
         return (jnp.take(_reference_table(p, spec), g, axis=0) * ct).sum()
 
-    gb = jax.grad(loss_backend)(params)
-    gr = jax.grad(loss_reference)(params)
-    err = jax.tree.reduce(max, jax.tree.map(
-        lambda a, b: float(jnp.max(jnp.abs(a - b))), gb, gr))
-    assert err < 1e-5, err
+    gb = jax.grad(loss_backend, allow_int=True)(params)
+    gr = jax.grad(loss_reference, allow_int=True)(params)
+    assert _max_grad_err(gb, gr) < 1e-4
 
 
 @pytest.mark.parametrize("kind", KERNEL_BACKENDS)
@@ -116,13 +141,11 @@ def test_kernel_path_tracks_jnp_path(kind):
         np.asarray(embedding_lookup(params, spec_k, idx)),
         np.asarray(embedding_lookup(params, spec_j, idx)),
         rtol=1e-6, atol=1e-7)
-    gk = jax.grad(lambda p: (embedding_lookup(p, spec_k, idx) * ct).sum()
-                  )(params)
-    gj = jax.grad(lambda p: (embedding_lookup(p, spec_j, idx) * ct).sum()
-                  )(params)
-    err = jax.tree.reduce(max, jax.tree.map(
-        lambda a, b: float(jnp.max(jnp.abs(a - b))), gk, gj))
-    assert err < 1e-5, err
+    gk = jax.grad(lambda p: (embedding_lookup(p, spec_k, idx) * ct).sum(),
+                  allow_int=True)(params)
+    gj = jax.grad(lambda p: (embedding_lookup(p, spec_j, idx) * ct).sum(),
+                  allow_int=True)(params)
+    assert _max_grad_err(gk, gj) < 1e-5
 
 
 @pytest.mark.parametrize("kind", BACKENDS)
@@ -219,7 +242,7 @@ def test_param_specs_owned_by_backend():
     assert get_backend("robe").param_specs(
         _spec("robe", placement="model"), rules) \
         == {"memory": P("model")}
-    for kind in ("hashed", "tt"):
+    for kind in ("hashed", "tt", "qrobe"):
         tree = get_backend(kind).param_specs(_spec(kind), rules)
         assert all(s == P() for s in jax.tree.leaves(
             tree, is_leaf=lambda x: isinstance(x, P)))
@@ -248,10 +271,11 @@ def test_dlrm_config_sweeps_backend(kind):
              "dense": jnp.asarray(rs.randn(8, cfg.n_dense), jnp.float32),
              "label": jnp.asarray(rs.randint(0, 2, (8,)), jnp.int32)}
     loss, grads = jax.value_and_grad(
-        lambda p: R.loss_fn(p, cfg, batch)[0]
+        lambda p: R.loss_fn(p, cfg, batch)[0], allow_int=True
     )(R.init_params(jax.random.PRNGKey(0), cfg))
     assert bool(jnp.isfinite(loss))
-    assert all(bool(jnp.all(jnp.isfinite(l))) for l in jax.tree.leaves(grads))
+    assert all(bool(jnp.all(jnp.isfinite(l))) for l in jax.tree.leaves(grads)
+               if l.dtype != jax.dtypes.float0)
 
 
 # ---------------------------------------------------------------------------
@@ -261,7 +285,7 @@ def test_dlrm_config_sweeps_backend(kind):
 def test_fused_serve_default_none():
     """Optional protocol member: backends without a fused serve path leave
     the class attribute as None; robe implements it."""
-    for kind in ("full", "hashed", "tt"):
+    for kind in ("full", "hashed", "tt", "qrobe"):
         assert get_backend(kind).fused_serve is None
     assert callable(get_backend("robe").fused_serve)
 

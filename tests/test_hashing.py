@@ -1,9 +1,8 @@
 import numpy as np
 import jax.numpy as jnp
-import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core.hashing import M31, UHash, add64, mod_m31, mul32, split31
+from repro.core.hashing import UHash, add64, mod_m31, mul32, split31
 
 U32 = st.integers(min_value=0, max_value=2**32 - 1)
 

@@ -29,9 +29,10 @@ import pytest
 
 from repro.core.robe import RobeSpec
 from repro.kernels import ref
-from repro.kernels.ops import (dot_interaction, qr_lookup, robe_lookup,
-                               serve_fused, tt_lookup)
+from repro.kernels.ops import (dot_interaction, qr_lookup, qrobe_lookup,
+                               robe_lookup, serve_fused, tt_lookup)
 from repro.nn.embedding_backends.hashed import qr_layout
+from repro.nn.embedding_backends.qrobe import GROUP_LOG2
 from repro.nn.embedding_backends.tt import factor_dim, factor_rows
 
 VOCABS = (40, 24, 64)
@@ -82,6 +83,20 @@ def _case(name, dtype=jnp.float32, b=16, dim=24, vocabs=VOCABS, seed=0):
                                         factors, dim, uk)
         reference = lambda p: ref.tt_lookup_ref(p[0], p[1], p[2], idx,
                                                 offsets, factors, dim)
+    elif name == "qrobe":
+        # int8 codes + learned per-group scales, dequantized in-kernel.
+        # ``dtype`` parametrizes the SCALE (= activation) dtype; the codes
+        # are int8 in every case — the mixed-dtype contract.
+        spec = RobeSpec(size=4096, block_size=16, seed=7, use_sign=True)
+        params = (jnp.asarray(rs.randint(-127, 128, (4096,)), jnp.int8),
+                  jnp.asarray(np.abs(rs.randn(4096 >> GROUP_LOG2)) * 0.05
+                              + 0.01, dtype))
+        tids = tuple(range(f))
+        fused = lambda p, uk: qrobe_lookup(p[0], p[1], idx, tids, dim,
+                                           spec, GROUP_LOG2, uk)
+        reference = lambda p: ref.qrobe_lookup_ref(
+            p[0], p[1], idx, jnp.arange(f, dtype=jnp.uint32), dim, spec,
+            GROUP_LOG2)
     elif name == "serve":
         # the one-pass serve super-kernel: params = (ROBE array, bottom-MLP
         # output); multi-field offsets exercised via per-field table ids
@@ -98,7 +113,7 @@ def _case(name, dtype=jnp.float32, b=16, dim=24, vocabs=VOCABS, seed=0):
     return fused, reference, params
 
 
-CASES = ("robe", "dot", "qr", "tt", "serve")
+CASES = ("robe", "dot", "qr", "tt", "qrobe", "serve")
 #: every fused op carries a custom_vjp (explicit scatter-add / symmetric
 #: gram contraction) — the Pallas forwards have no autodiff rule
 VJP_CASES = CASES
@@ -156,9 +171,15 @@ def test_custom_vjp_grad_matches_ref_grad(name, dtype, use_kernel):
     def loss_ref(p):
         return (reference(p).astype(jnp.float32) * ct).sum()
 
-    g_fused = jax.grad(loss_fused)(params)
-    g_ref = jax.grad(loss_ref)(params)
+    # allow_int: qrobe's int8 codes flow through grad with float0
+    # cotangents (a no-op for the all-float cases)
+    g_fused = jax.grad(loss_fused, allow_int=True)(params)
+    g_ref = jax.grad(loss_ref, allow_int=True)(params)
     for gf, gr in zip(g_fused, g_ref):
+        if gf.dtype == jax.dtypes.float0:
+            # integer leaf: both paths must agree there is NO gradient
+            assert gr.dtype == jax.dtypes.float0
+            continue
         # custom_vjp contract: cotangents carry the parameter dtype.
         # bf16 tolerance is looser than forward: the ref path's scatter-add
         # accumulates in bf16 while the custom bwd accumulates in f32, and

@@ -5,7 +5,7 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.robe import (RobeSpec, init_memory, robe_lookup,
-                             robe_lookup_bag, robe_slots, robe_signs,
+                             robe_lookup_bag, robe_slots,
                              sketch_vector, unsketch_vector)
 
 

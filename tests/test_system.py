@@ -12,7 +12,6 @@ import tempfile
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.data.synthetic_ctr import CtrDataConfig, CtrStream
 from repro.models.recsys import RecsysConfig, forward, init_params, loss_fn

@@ -12,7 +12,7 @@ import pytest
 from repro.data.lm_data import LmDataConfig, LmStream
 from repro.data.synthetic_ctr import CtrDataConfig, CtrStream
 from repro.train import checkpoint as ck
-from repro.train.metrics import StreamingAuc, auc, logloss
+from repro.train.metrics import StreamingAuc, auc
 from repro.train.optimizer import OptimizerConfig, make_optimizer
 from repro.train.train_loop import (TrainConfig, build_train_step,
                                     init_state, run)
