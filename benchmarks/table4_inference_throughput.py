@@ -116,9 +116,20 @@ def serving_rows(fast: bool = False) -> list:
     ``full`` backend.  Service times are measured on the real jitted
     scorers; queueing/waiting is exactly modeled on the replay's virtual
     clock (see ``repro.serve.replay``).
+
+    The ``+push`` row is the online-serving cell: an ``OnlineTrainer``
+    trains the full substrate live on a concept-drifting stream,
+    publishing delta checkpoints, and the replay hot-swaps them in as
+    scheduled push events — its extra columns (``pushes``,
+    ``push_p50_ms``/``push_max_ms``, ``mean_staleness_s``) record the
+    swap cost on the timeline and how stale the served model ran.
     """
-    from repro.serve.replay import ReplayConfig, run_cell, run_grid
+    import tempfile
+
+    from repro.serve.replay import (ReplayConfig, run_cell, run_grid,
+                                    run_push_cell)
     from repro.serve.server import EmbeddingServer, ServerConfig
+    from repro.train.online import OnlineConfig, OnlineTrainer
 
     server = EmbeddingServer(ServerConfig(vocab_sizes=SERVING_VOCABS))
     base = ReplayConfig(n_requests=1024 if fast else 4096,
@@ -130,6 +141,26 @@ def serving_rows(fast: bool = False) -> list:
     rows.append(run_cell(server, "full",
                          ReplayConfig(n_requests=1024 if fast else 4096),
                          zipf=4.0, warm_batches=warm))
+
+    # online push cell: train live on a drifting stream, replay drifting
+    # traffic with the publishes hot-swapped in mid-replay
+    n_steps = 24 if fast else 48
+    with tempfile.TemporaryDirectory() as pub:
+        train_stream = CtrStream(CtrDataConfig(
+            vocab_sizes=SERVING_VOCABS, n_dense=server.cfg.n_dense,
+            batch_size=256, drift_period=max(1, n_steps // 3), seed=11))
+        trainer = OnlineTrainer(
+            server.recsys_config("full"), train_stream,
+            OnlineConfig(publish_dir=pub,
+                         publish_every=max(1, n_steps // 3)))
+        trainer.run(n_steps)
+        server.reset_cache_stats()
+        push_row = run_push_cell(
+            server, "full", base, publish_dir=pub,
+            push_steps=[p.step for p in trainer.publishes],
+            drift_period=2, warm_batches=warm)
+    rows.append(dict(push_row, policy=push_row["policy"] + "+push"))
+
     out = []
     for r in rows:
         name = f"serving/{r['backend']}+{r['policy']}-z{r['zipf']}"

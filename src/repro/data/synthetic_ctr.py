@@ -10,8 +10,23 @@ the data layer generates a deterministic, step-indexed stream:
   linear term on the dense features — so a model that learns per-value
   embeddings can genuinely push AUC well above 0.5.
 
+**Concept drift** (``drift_period > 0``): production CTR traffic is
+non-stationary — CAFE (PAPERS.md) makes the case that skewed *and
+drifting* feature distributions are the real workload.  The stream models
+it as discrete phases of ``drift_period`` steps each
+(``phase = step // drift_period``):
+
+* *id drift* (covariate shift) — the zipf head rotates by
+  ``drift_fraction × vocab`` rows per phase, so each phase has a different
+  hot set (a hot-row cache warmed on phase k misses on phase k+1; an
+  online trainer keeps touching fresh rows);
+* *label drift* (concept shift) — the planted per-(field, value) score is
+  re-drawn per phase (the phase salts the score hash), so P(y|x) itself
+  moves and a frozen model's logloss degrades until the next model push.
+
 Determinism: ``batch_at(step)`` is a pure function of (seed, step) — exactly
 what fault-tolerant resume needs (restart at step k reproduces the stream).
+Drift keeps that property: the phase is a pure function of step.
 """
 
 from __future__ import annotations
@@ -31,6 +46,8 @@ class CtrDataConfig:
     label_temperature: float = 1.2
     seed: int = 1234
     multi_hot: int = 0                 # >0: bag size per field
+    drift_period: int = 0              # steps per drift phase (0 = stationary)
+    drift_fraction: float = 0.35       # zipf-head rotation per phase (× vocab)
 
 
 def _field_value_score(field: np.ndarray, value: np.ndarray,
@@ -54,24 +71,43 @@ class CtrStream:
         self._vocab = np.asarray(cfg.vocab_sizes, np.int64)
         self._fields = np.arange(len(cfg.vocab_sizes), dtype=np.int64)
 
-    def _sample_ids(self, rs: np.random.RandomState, n: int) -> np.ndarray:
-        """Power-law ids per field via inverse-CDF on u^alpha."""
+    def phase_at(self, step: int) -> int:
+        """Drift phase of ``step`` (0 when the stream is stationary)."""
+        p = self.cfg.drift_period
+        return int(step) // p if p > 0 else 0
+
+    def hot_offset(self, phase: int) -> np.ndarray:
+        """Per-field rotation of the zipf head for ``phase`` ([F] int64)."""
+        shift = np.maximum(1, (self.cfg.drift_fraction
+                               * self._vocab).astype(np.int64))
+        return (phase * shift) % self._vocab
+
+    def _sample_ids(self, rs: np.random.RandomState, n: int,
+                    phase: int = 0) -> np.ndarray:
+        """Power-law ids per field via inverse-CDF on u^alpha; under drift
+        the head (densest ids, near 0) rotates by ``hot_offset(phase)``."""
         f = len(self._vocab)
         u = rs.random_sample((n, f))
         skew = u ** (1.0 / max(1e-6, self.cfg.zipf_exponent)) \
             if self.cfg.zipf_exponent != 1.0 else u
         # heavier head: square the uniform
         ids = (skew * skew * self._vocab[None, :]).astype(np.int64)
-        return np.minimum(ids, self._vocab[None, :] - 1)
+        ids = np.minimum(ids, self._vocab[None, :] - 1)
+        if phase:
+            ids = (ids + self.hot_offset(phase)[None, :]) % self._vocab[None, :]
+        return ids
 
     def batch_at(self, step: int) -> dict:
         cfg = self.cfg
         rs = np.random.RandomState((cfg.seed * 1_000_003 + step) % 2 ** 31)
         n = cfg.batch_size
-        ids = self._sample_ids(rs, n)                       # [B, F]
+        phase = self.phase_at(step)
+        ids = self._sample_ids(rs, n, phase)                # [B, F]
+        # label drift: the phase salts the planted score hash, so P(y|x)
+        # itself moves between phases (concept shift, not just covariate)
         score = _field_value_score(
             np.broadcast_to(self._fields[None, :], ids.shape), ids,
-            cfg.seed).mean(axis=1) * 4.0
+            cfg.seed + phase * 7919).mean(axis=1) * 4.0
         batch = {}
         if cfg.n_dense:
             dense = rs.randn(n, cfg.n_dense).astype(np.float32)
@@ -82,7 +118,7 @@ class CtrStream:
         batch["label"] = (rs.random_sample(n) < prob).astype(np.int32)
         batch["sparse"] = ids.astype(np.int32)
         if cfg.multi_hot:
-            bags = np.stack([self._sample_ids(rs, n)
+            bags = np.stack([self._sample_ids(rs, n, phase)
                              for _ in range(cfg.multi_hot)], axis=-1)
             batch["sparse_bag"] = bags.astype(np.int32)
         return batch

@@ -67,6 +67,15 @@ class EmbeddingBackend:
     #: it with another cache would muddy the full-vs-robe comparison); tt
     #: declines because its cost is the core contraction, not the fetch.
     cacheable_rows = None
+    #: optional push-invalidation companion to ``cacheable_rows``: given the
+    #: ids a model push *trained* in a field, which cached ids' composed
+    #: rows changed?  A backend whose stored rows are shared across ids
+    #: (``hashed``: training id x moves bucket rows x//m and x%m, so every
+    #: id sharing either bucket recomposes differently) overrides this with
+    #: a method ``affected_rows(spec, field, touched_ids, candidate_ids) ->
+    #: [n] bool mask over candidate_ids``.  ``None`` means rows are private
+    #: per id (``full``) and the cache invalidates by exact id match.
+    affected_rows = None
     #: optional post-optimizer projection hook: a backend whose stored
     #: parameters are NOT what the math sees (quantized substrates —
     #: ``qrobe``'s int8 codes behind a learned dequant) overrides this with

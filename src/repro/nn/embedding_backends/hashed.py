@@ -104,6 +104,18 @@ class HashedBackend(EmbeddingBackend):
         r = np.asarray(params["r_table"])
         return q[ids // m + int(q_off[field])] * r[ids % m + int(r_off[field])]
 
+    def affected_rows(self, spec, field: int, touched: np.ndarray,
+                      candidates: np.ndarray) -> np.ndarray:
+        """Push-invalidation hook: training id x moves bucket rows
+        Q[x//m] and R[x%m], so every candidate sharing a quotient OR
+        remainder bucket with a touched id has a changed composed row —
+        exact-id invalidation would leave those cache entries stale."""
+        m = _m(spec)
+        t = np.asarray(touched, np.int64).ravel()
+        c = np.asarray(candidates, np.int64).ravel()
+        return (np.isin(c // m, np.unique(t // m))
+                | np.isin(c % m, np.unique(t % m)))
+
     def param_specs(self, spec, rules, mesh=None) -> dict:
         # replicated on every mesh: a degraded mesh changes nothing, the
         # elastic restore just re-broadcasts both tables to the survivors

@@ -187,6 +187,57 @@ class HotRowCache:
                     [:self.capacity]]
         self._rows = {int(k): self._rows[int(k)] for k in keep}
 
+    # -- model push / invalidation ------------------------------------------
+
+    def set_params(self, params) -> None:
+        """Re-point at freshly pushed parameters.  Always paired with
+        ``invalidate``/``clear`` — surviving entries are only valid because
+        the push contract says their rows are bit-identical under the new
+        params (delta manifest: untouched rows never moved)."""
+        self.params = params
+
+    def clear(self) -> int:
+        """Drop every resident row (a full-snapshot push, where no delta
+        manifest bounds what changed).  Sketch heat survives — the hot set
+        is a property of the *traffic*, not of the parameters — so the
+        store re-converges in one warm pass.  Returns rows dropped."""
+        n = len(self._rows)
+        self._rows.clear()
+        return n
+
+    def invalidate(self, field: int, ids) -> int:
+        """Drop the resident rows of ``field`` that a push's touched-id set
+        invalidates; untouched entries survive (and stay bit-exact, per the
+        delta contract).  Exact id match by default; a backend whose stored
+        rows are shared across ids widens the set via its ``affected_rows``
+        hook (``hashed``: quotient/remainder bucket-mates).  Returns rows
+        dropped."""
+        ids = np.asarray(list(ids) if not isinstance(ids, np.ndarray)
+                         else ids, np.int64).ravel()
+        if ids.size == 0 or not self._rows:
+            return 0
+        resident = np.fromiter(self._rows.keys(), np.int64,
+                               count=len(self._rows))
+        lo = int(self._offsets[field])
+        hi = lo + int(self.spec.vocab_sizes[field])
+        cand = resident[(resident >= lo) & (resident < hi)] - lo
+        if cand.size == 0:
+            return 0
+        if self.backend.affected_rows is not None:
+            mask = self.backend.affected_rows(self.spec, field, ids, cand)
+        else:
+            mask = np.isin(cand, ids)
+        dropped = cand[mask] + lo
+        for g in dropped:
+            del self._rows[int(g)]
+        return int(dropped.size)
+
+    def invalidate_manifest(self, touched: Dict) -> int:
+        """Apply a delta manifest's touched map ({field: ids}; JSON string
+        keys accepted).  Returns total rows dropped."""
+        return sum(self.invalidate(int(f), ids)
+                   for f, ids in (touched or {}).items())
+
     # -- bookkeeping --------------------------------------------------------
 
     def warm(self, id_batches) -> None:

@@ -48,7 +48,8 @@ from repro.serve.router import (DeadlineBatcher, FixedBatcher,
 from repro.serve.serving import percentile
 
 __all__ = ["ReplayConfig", "ReplayReport", "replay", "synthetic_service",
-           "measured_service", "make_batcher", "run_cell", "run_grid"]
+           "measured_service", "make_batcher", "run_cell", "run_grid",
+           "run_push_cell"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -79,6 +80,14 @@ class ReplayReport:
     mean_batch: float
     makespan_s: float
     deadline_miss: int                 # completed but past their deadline
+    # -- model-push metrics (populated only when replay ran with events) --
+    has_pushes: bool = False
+    pushes: int = 0                    # push events fired on the timeline
+    push_p50_ms: float = 0.0           # wall time of the push itself
+    push_max_ms: float = 0.0
+    mean_staleness_s: float = 0.0      # mean over completed requests of
+    #   (batch completion − last push before its dispatch): how old the
+    #   model a request was scored on is, under this push schedule
 
     def as_row(self) -> dict:
         r = dataclasses.asdict(self)
@@ -88,6 +97,16 @@ class ReplayReport:
         r["offered_qps"] = round(r["offered_qps"], 1)
         r["mean_batch"] = round(r["mean_batch"], 2)
         r["makespan_s"] = round(r["makespan_s"], 4)
+        # push columns only exist on push-schedule rows — plain cells keep
+        # their schema (check_bench treats per-name key drift as failure)
+        if r.pop("has_pushes"):
+            r["push_p50_ms"] = round(r["push_p50_ms"], 3)
+            r["push_max_ms"] = round(r["push_max_ms"], 3)
+            r["mean_staleness_s"] = round(r["mean_staleness_s"], 4)
+        else:
+            for k in ("pushes", "push_p50_ms", "push_max_ms",
+                      "mean_staleness_s"):
+                r.pop(k)
         return r
 
 
@@ -141,27 +160,44 @@ def make_batcher(cfg: ReplayConfig) -> DeadlineBatcher:
 
 def replay(service: Callable, requests: Sequence[dict],
            arrivals: np.ndarray, cfg: ReplayConfig,
-           batcher: Optional[DeadlineBatcher] = None) -> ReplayReport:
+           batcher: Optional[DeadlineBatcher] = None,
+           events: Optional[Sequence] = None) -> ReplayReport:
     """Drive ``requests`` (arriving at ``arrivals``) through the batcher
     into ``service``; returns the latency/throughput report.
 
     ``service(batch, n_valid) -> seconds`` is the service-time model
     (synthetic or measured).  Latency of request i = completion of its
     batch − its arrival; shed requests are counted, not timed.
+
+    ``events``: optional ``[(virtual_time, fn), ...]`` scheduled actions —
+    the model-push hook.  Each fires once when the virtual clock reaches
+    its time, strictly *between* dispatched batches (the same no-mixed-
+    params guarantee as ``AsyncRouter.apply``): every batch dispatched
+    before the event scores on the old model, every one after on the new.
+    Queued requests are untouched — a push never sheds.  The fn's wall
+    time is recorded as push latency AND occupies the single server on
+    the timeline (a swap blocks the scorer), so aggressive push schedules
+    show up honestly in p99; ``mean_staleness_s`` reports how old the
+    served model was on average under the schedule.
     """
     if len(requests) != len(arrivals):
         raise ValueError("requests and arrivals must align")
     batcher = batcher if batcher is not None else make_batcher(cfg)
+    pending_events = sorted(
+        [(float(t), fn) for t, fn in (events or [])], key=lambda e: e[0])
     lats: List[float] = []
     sizes: List[int] = []
+    push_wall: List[float] = []
+    stale_sum = 0.0
     shed = 0
     deadline_miss = 0
     server_free = 0.0
+    last_push_t = 0.0          # virtual time of the last fired event
     i, n = 0, len(requests)
     now = 0.0
 
     def dispatch(reqs, close_time):
-        nonlocal server_free, deadline_miss
+        nonlocal server_free, deadline_miss, stale_sum
         batch, n_valid = stack_and_pad([r.features for r in reqs],
                                        cfg.max_batch)
         svc = float(service(batch, n_valid))
@@ -170,22 +206,39 @@ def replay(service: Callable, requests: Sequence[dict],
         server_free = done
         batcher.observe(svc)
         sizes.append(n_valid)
+        stale_sum += (done - last_push_t) * len(reqs)
         for r in reqs:
             lats.append(done - r.arrival)
             if r.deadline is not None and done > r.deadline:
                 deadline_miss += 1
 
-    while i < n or len(batcher):
+    def fire_events(upto: float) -> None:
+        nonlocal server_free, last_push_t
+        while pending_events and pending_events[0][0] <= upto:
+            t_ev, fn = pending_events.pop(0)
+            t0 = time.perf_counter()
+            fn()
+            wall = time.perf_counter() - t0
+            push_wall.append(wall)
+            # the swap occupies the single server: batches due during it
+            # start after, on the new model
+            server_free = max(server_free, t_ev) + wall
+            last_push_t = t_ev
+
+    while i < n or len(batcher) or pending_events:
         t_close = batcher.close_at()
         t_arr = arrivals[i] if i < n else None
-        events = [] if t_arr is None else [float(t_arr)]
+        events_t = [] if t_arr is None else [float(t_arr)]
         if t_close is not None:
             # a due batch can only start once the scorer frees up — the
             # single-server semantics that let queue_full actually trip
-            events.append(max(t_close, server_free))
-        if not events:
+            events_t.append(max(t_close, server_free))
+        if pending_events:
+            events_t.append(pending_events[0][0])
+        if not events_t:
             break
-        now = max(now, min(events))
+        now = max(now, min(events_t))
+        fire_events(now)
         while i < n and arrivals[i] <= now:
             t = float(arrivals[i])
             deadline = None if cfg.deadline_s is None else t + cfg.deadline_s
@@ -203,13 +256,19 @@ def replay(service: Callable, requests: Sequence[dict],
     lat_ms = np.sort(np.asarray(lats)) * 1e3
     makespan = max(server_free, float(arrivals[-1])) if len(lats) else 0.0
     p = (lambda q: percentile(lat_ms, q)) if len(lat_ms) else (lambda q: 0.0)
+    pw = np.sort(np.asarray(push_wall)) * 1e3
     return ReplayReport(
         p50_ms=p(0.5), p95_ms=p(0.95), p99_ms=p(0.99),
         qps=len(lats) / makespan if makespan else 0.0,
         offered_qps=n / float(arrivals[-1]),
         completed=len(lats), shed=shed, batches=len(sizes),
         mean_batch=float(np.mean(sizes)) if sizes else 0.0,
-        makespan_s=makespan, deadline_miss=deadline_miss)
+        makespan_s=makespan, deadline_miss=deadline_miss,
+        has_pushes=events is not None,
+        pushes=len(push_wall),
+        push_p50_ms=percentile(pw, 0.5) if len(pw) else 0.0,
+        push_max_ms=float(pw[-1]) if len(pw) else 0.0,
+        mean_staleness_s=stale_sum / len(lats) if lats else 0.0)
 
 
 # ---------------------------------------------------------------------------
@@ -250,6 +309,68 @@ def run_cell(server, backend: str, cfg: ReplayConfig, *,
            "max_batch": cfg.max_batch,
            "deadline_ms": (None if cfg.deadline_s is None
                            else round(cfg.deadline_s * 1e3, 2)),
+           **rep.as_row()}
+    stats = server.cache_stats(backend)
+    if stats is not None:
+        row["hit_rate"] = stats["hit_rate"]
+        row["cache_resident"] = stats["resident_rows"]
+    return row
+
+
+def run_push_cell(server, backend: str, cfg: ReplayConfig, *,
+                  publish_dir: str, push_steps: Sequence[int],
+                  zipf: float = 1.05, drift_period: int = 0,
+                  warm_batches: int = 64,
+                  service: Optional[Callable] = None) -> dict:
+    """One online-serving cell: replay (optionally drifting) traffic with
+    ``server.push`` events scheduled on the virtual clock.
+
+    ``push_steps``: publish steps in ``publish_dir`` (an ``OnlineTrainer``
+    run's ``[p.step for p in publishes]``).  The first is pushed *before*
+    cache warm-up (the serving baseline); the rest fire evenly spaced
+    across the arrival span, so the row's p99 includes the swaps and
+    ``mean_staleness_s`` reflects the push cadence.  ``drift_period`` > 0
+    drifts the request stream itself (in underlying 256-request batch
+    steps), making the cell the full online story: drifting traffic
+    scored by a model republished mid-replay.
+    """
+    push_steps = list(push_steps)
+    if not push_steps:
+        raise ValueError("run_push_cell needs at least one publish step")
+    server.push(backend, step=push_steps[0], ckpt_dir=publish_dir)
+    data_cfg = CtrDataConfig(
+        vocab_sizes=server.cfg.vocab_sizes, n_dense=server.cfg.n_dense,
+        batch_size=256, zipf_exponent=zipf, seed=cfg.seed + 7,
+        drift_period=drift_period)
+    stream = RequestStream(data_cfg)
+    requests = stream.requests(cfg.n_requests)
+    arrivals = poisson_arrivals(cfg.rate_hz, cfg.n_requests, seed=cfg.seed)
+
+    cache = server.cache(backend)
+    if cache is not None:
+        # warm on the phase the replay opens in (a drifting stream's
+        # far-future steps are a different phase = useless heat), the
+        # "recent traffic window" a production cache would hold
+        cache.warm(stream.id_batches(warm_batches, start_step=0))
+    score_fn = server.score_fn(backend)
+    if service is None:
+        batch, nv = stack_and_pad(requests[:1], cfg.max_batch)
+        score_fn(batch, n_valid=nv)
+        if cache is not None:
+            cache.reset_stats()
+        service = measured_service(score_fn)
+    span = float(arrivals[-1])
+    later = push_steps[1:]
+    events = [(span * (k + 1) / (len(later) + 1),
+               lambda s=s: server.push(backend, step=s,
+                                       ckpt_dir=publish_dir))
+              for k, s in enumerate(later)]
+    rep = replay(service, requests, arrivals, cfg, events=events)
+    row = {"backend": backend, "policy": cfg.policy, "zipf": zipf,
+           "max_batch": cfg.max_batch,
+           "deadline_ms": (None if cfg.deadline_s is None
+                           else round(cfg.deadline_s * 1e3, 2)),
+           "drift_period": drift_period, "push_steps": len(push_steps),
            **rep.as_row()}
     stats = server.cache_stats(backend)
     if stats is not None:

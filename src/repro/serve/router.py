@@ -311,6 +311,26 @@ class AsyncRouter:
         self._wake.set()
         return await fut
 
+    async def apply(self, fn: Callable):
+        """Run ``fn`` strictly *between* dispatched micro-batches — the
+        hot-swap barrier ``EmbeddingServer.push`` rides through.
+
+        ``_dispatch`` is synchronous on the event loop, so a coroutine step
+        (this call) can never interleave with a batch mid-score: every
+        request dispatched before ``apply`` resolves on the old model, the
+        next dispatched batch sees whatever ``fn`` installed, and no batch
+        ever scores on mixed params.  Requests already admitted to the
+        queue are untouched — they dispatch normally afterwards (on the
+        new model), never shed.  Returns ``fn()``'s result.
+        """
+        if self._task is None:
+            raise RuntimeError("router not started (await router.start())")
+        result = fn()
+        # service estimates may shift with new params; wake the dispatcher
+        # so close-outs are re-planned rather than slept through
+        self._wake.set()
+        return result
+
     async def _run(self) -> None:
         while not self._stopping:
             now = self._clock()

@@ -28,6 +28,7 @@ the server adds no placement logic of its own.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Dict, Optional, Sequence, Tuple
 
 import jax
@@ -37,8 +38,9 @@ import numpy as np
 from repro.models.recsys import RecsysConfig, init_params, serve_scores
 from repro.nn.embeddings import get_backend
 from repro.serve.hot_cache import HotRowCache
+from repro.train import checkpoint as ckpt_lib
 
-__all__ = ["ServerConfig", "EmbeddingServer"]
+__all__ = ["ServerConfig", "EmbeddingServer", "PushReport"]
 
 DEFAULT_BACKENDS = ("full", "robe", "hashed", "tt")
 
@@ -68,6 +70,9 @@ class ServerConfig:
     cache_admit_threshold: int = 1
     sketch_width: int = 1 << 16
     seed: int = 0
+    #: default publish dir ``push()`` restores from (an ``OnlineTrainer``'s
+    #: ``publish_dir``); per-call ``ckpt_dir`` overrides
+    model_dir: Optional[str] = None
 
     def recsys_cfg(self, backend: str) -> RecsysConfig:
         bot = self.bot_mlp or (64, self.embed_dim)
@@ -79,6 +84,18 @@ class ServerConfig:
             embedding=backend,
             robe_size=max(512, n_emb // self.robe_compression),
             robe_block=self.robe_block, use_kernel=self.use_kernel)
+
+
+@dataclasses.dataclass(frozen=True)
+class PushReport:
+    """What one ``EmbeddingServer.push`` did (the BENCH push-row feed)."""
+
+    backend: str
+    step: int
+    kind: str                 # "full" | "delta"
+    invalidated: int          # cache rows dropped by the touched manifest
+    cache_cleared: bool       # full push (or unanchored delta) → drop all
+    wall_s: float
 
 
 class EmbeddingServer:
@@ -118,10 +135,17 @@ class EmbeddingServer:
                     admit_threshold=cfg.cache_admit_threshold,
                     seed=cfg.seed)
             self._caches[name] = cache
+        # last publish step applied per backend (None: still on init params)
+        self._pushed_step: Dict[str, Optional[int]] = \
+            {name: None for name in cfg.backends}
 
     @property
     def backends(self) -> Tuple[str, ...]:
         return tuple(self.cfg.backends)
+
+    def pushed_step(self, backend: str) -> Optional[int]:
+        """Step of the last publish applied (None before any push)."""
+        return self._pushed_step[backend]
 
     def recsys_config(self, backend: str) -> RecsysConfig:
         return self._cfgs[backend]
@@ -168,6 +192,68 @@ class EmbeddingServer:
 
         fn.__name__ = f"score_{backend}"
         return fn
+
+    # -- zero-downtime model push -------------------------------------------
+
+    def push(self, backend: str, step: Optional[int] = None, *,
+             ckpt_dir: Optional[str] = None) -> PushReport:
+        """Hot-swap ``backend``'s params to a published checkpoint.
+
+        Restores the publish at ``step`` (newest when None) from
+        ``ckpt_dir`` (default ``cfg.model_dir``) via
+        ``checkpoint.restore_delta``, swaps the parameter tree in one
+        assignment, and reconciles the hot cache:
+
+        * delta publish whose chain anchors at this server's last applied
+          step → ``invalidate`` exactly the union of touched rows for
+          chain entries past that anchor (untouched entries survive,
+          bit-exact by the delta contract);
+        * full publish, first push, or an unanchored chain (the server
+          skipped past a full base) → ``clear`` — nothing bounds what
+          changed, so everything must refetch.
+
+        The swap itself is atomic with respect to a dispatching
+        ``AsyncRouter``/replay loop (scoring is synchronous between
+        micro-batches; see ``AsyncRouter.apply``): in-flight batches
+        complete on the old params, the next dispatched batch scores on
+        the new ones, and no batch ever sees a mix.
+        """
+        t0 = time.perf_counter()
+        ckpt_dir = ckpt_dir if ckpt_dir is not None else self.cfg.model_dir
+        if ckpt_dir is None:
+            raise ValueError("push: no ckpt_dir given and cfg.model_dir "
+                             "is unset")
+        restored = ckpt_lib.restore_delta(ckpt_dir, self._params[backend],
+                                          step=step)
+        if restored is None:
+            raise FileNotFoundError(
+                f"push: no restorable publish in {ckpt_dir}"
+                + (f" at step {step}" if step is not None else ""))
+        tree, manifest = restored
+        new_params = jax.tree.map(jnp.asarray, tree)
+        new_step = int(manifest["step"])
+        last = self._pushed_step[backend]
+
+        invalidated, cleared = 0, False
+        cache = self._caches[backend]
+        if cache is not None:
+            anchors = {int(manifest.get("base_full_step", new_step))}
+            anchors.update(int(c["step"]) for c in manifest.get("chain", []))
+            if manifest.get("delta") and last is not None and last in anchors:
+                for c in manifest["chain"]:
+                    if int(c["step"]) > last:
+                        invalidated += cache.invalidate_manifest(c["touched"])
+            else:
+                cache.clear()
+                cleared = True
+            cache.set_params(new_params["embedding"])
+
+        self._params[backend] = new_params
+        self._pushed_step[backend] = new_step
+        return PushReport(backend=backend, step=new_step,
+                          kind="delta" if manifest.get("delta") else "full",
+                          invalidated=invalidated, cache_cleared=cleared,
+                          wall_s=time.perf_counter() - t0)
 
     # -- cache bookkeeping --------------------------------------------------
 

@@ -15,6 +15,13 @@ Design for the 1000-node story:
 * **async** — saves run on a background thread (snapshot is taken
   synchronously via device_get, I/O overlaps the next steps).
 * **retention** — keep-last-k GC.
+* **deltas** — ``save_delta``/``restore_delta`` for the online-training
+  publish path: a delta stores only the leaves whose bytes changed vs the
+  previous publish (past an optional threshold) plus a manifest of touched
+  embedding groups ({field: row ids}), and restore walks the
+  ``base_step`` chain back to a full snapshot.  The manifest's touched
+  sets are the serving tier's cache-invalidation feed
+  (``HotRowCache.invalidate``).
 """
 
 from __future__ import annotations
@@ -151,21 +158,24 @@ def restore_latest(ckpt_dir: str, template, shardings=None,
         except BaseException:
             continue                         # corrupted → try previous
         if shardings is not None:
-            # None is an (empty) pytree node, so flatten the shardings
-            # with None-as-leaf and zip instead of a two-tree map
-            flat, treedef = jax.tree.flatten(tree)
-            flat_sh = jax.tree.leaves(shardings,
-                                      is_leaf=lambda s: s is None)
-            if len(flat_sh) != len(flat):
-                raise ValueError(
-                    f"shardings tree has {len(flat_sh)} leaves, state has "
-                    f"{len(flat)} — a non-congruent spec tree would zip "
-                    "shardings onto the wrong arrays")
-            tree = treedef.unflatten(
-                [x if s is None else jax.device_put(x, s)
-                 for x, s in zip(flat, flat_sh)])
+            tree = _apply_shardings(tree, shardings)
         return tree, manifest
     return None
+
+
+def _apply_shardings(tree, shardings):
+    # None is an (empty) pytree node, so flatten the shardings
+    # with None-as-leaf and zip instead of a two-tree map
+    flat, treedef = jax.tree.flatten(tree)
+    flat_sh = jax.tree.leaves(shardings, is_leaf=lambda s: s is None)
+    if len(flat_sh) != len(flat):
+        raise ValueError(
+            f"shardings tree has {len(flat_sh)} leaves, state has "
+            f"{len(flat)} — a non-congruent spec tree would zip "
+            "shardings onto the wrong arrays")
+    return treedef.unflatten(
+        [x if s is None else jax.device_put(x, s)
+         for x, s in zip(flat, flat_sh)])
 
 
 def restore_onto(ckpt_dir: str, template, ctx, spec_tree,
@@ -184,3 +194,199 @@ def restore_onto(ckpt_dir: str, template, ctx, spec_tree,
     return restore_latest(ckpt_dir, template,
                           shardings=dist.named_shardings(ctx, specs),
                           step=step)
+
+
+# ---------------------------------------------------------------------------
+# Delta checkpoints (online-training publish path)
+# ---------------------------------------------------------------------------
+
+def _leaf_changed(a: np.ndarray, b: np.ndarray, threshold: float) -> bool:
+    """Did leaf bytes change past ``threshold``?  threshold is a max-abs
+    bound, only meaningful for float leaves; 0.0 means any byte change."""
+    if a.shape != b.shape or a.dtype != b.dtype:
+        return True
+    if threshold > 0.0 and np.issubdtype(a.dtype, np.floating):
+        if a.size == 0:
+            return False
+        return bool(np.max(np.abs(a.astype(np.float64)
+                                  - b.astype(np.float64))) > threshold)
+    return not np.array_equal(a, b)
+
+
+def save_delta(ckpt_dir: str, step: int, tree, base_tree, base_step: int,
+               threshold: float = 0.0,
+               touched: Optional[dict] = None) -> str:
+    """Atomic delta checkpoint: only leaves that changed vs ``base_tree``.
+
+    ``base_tree`` is the previously *published* tree (full or delta) at
+    ``base_step`` — deltas chain: ``restore_delta`` walks ``base_step``
+    links back to a full ``save()`` snapshot and re-applies each delta's
+    changed leaves in order.
+
+    ``touched`` is the manifest of touched embedding groups,
+    ``{field index: iterable of row ids}`` — the rows the trainer's
+    gradients could have moved since ``base_step``.  The serving tier
+    invalidates exactly these rows on push; for the contract to be exact
+    the optimizer must leave zero-gradient rows bit-identical (plain SGD
+    or adagrad — not adam/momentum, whose state moves rows after the
+    gradient is gone).
+
+    Retention: writing a delta GCs deltas strictly older than the newest
+    full snapshot (their chains can no longer be the shortest restore
+    path); fulls in a publish dir are governed by ``save(keep_last=)``.
+    """
+    os.makedirs(ckpt_dir, exist_ok=True)
+    tmp = os.path.join(ckpt_dir, f"tmp-delta-{step}")
+    final = os.path.join(ckpt_dir, f"delta-{step:010d}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+
+    leaves, treedef = _flatten(tree)
+    base_leaves, base_treedef = _flatten(base_tree)
+    if treedef != base_treedef:
+        raise ValueError("delta tree structure differs from base tree")
+    manifest = {"step": step, "base_step": base_step, "delta": True,
+                "threshold": threshold, "n_leaves": len(leaves),
+                "treedef": str(treedef),
+                "touched": {str(k): sorted(int(i) for i in np.ravel(list(v)))
+                            for k, v in (touched or {}).items()},
+                "leaves": []}
+    arrays = {}
+    for i, (leaf, base) in enumerate(zip(leaves, base_leaves)):
+        arr = np.asarray(jax.device_get(leaf))
+        barr = np.asarray(jax.device_get(base))
+        meta = {"key": f"leaf_{i}", "shape": list(arr.shape),
+                "dtype": str(arr.dtype),
+                "changed": _leaf_changed(arr, barr, threshold)}
+        if meta["changed"]:
+            arrays[meta["key"]] = arr
+            meta["crc32"] = zlib.crc32(np.ascontiguousarray(arr).tobytes())
+        manifest["leaves"].append(meta)
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    _gc_deltas(ckpt_dir)
+    return final
+
+
+def _gc_deltas(ckpt_dir: str) -> None:
+    fulls = [int(d[5:]) for d in os.listdir(ckpt_dir)
+             if d.startswith("step-")]
+    newest_full = max(fulls) if fulls else None
+    for d in os.listdir(ckpt_dir):
+        if d.startswith("tmp-"):
+            shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
+        elif (d.startswith("delta-") and newest_full is not None
+              and int(d[6:]) < newest_full):
+            shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
+
+
+def _list_snapshots(ckpt_dir: str) -> list:
+    """[(step, kind, dirname)] sorted oldest→newest; a full snapshot sorts
+    after a delta at the same step (it's the preferred restore source)."""
+    out = []
+    for d in os.listdir(ckpt_dir):
+        if d.startswith("step-"):
+            out.append((int(d[5:]), "full", d))
+        elif d.startswith("delta-"):
+            out.append((int(d[6:]), "delta", d))
+    return sorted(out, key=lambda t: (t[0], t[1] == "full"))
+
+
+def _load_manifest(path: str) -> dict:
+    with open(os.path.join(path, "manifest.json")) as f:
+        return json.load(f)
+
+
+def _apply_delta(leaves: list, path: str, manifest: dict) -> list:
+    data = np.load(os.path.join(path, "arrays.npz"))
+    out = list(leaves)
+    for i, meta in enumerate(manifest["leaves"]):
+        if not meta["changed"]:
+            continue
+        arr = data[meta["key"]]
+        if zlib.crc32(np.ascontiguousarray(arr).tobytes()) != meta["crc32"]:
+            raise IOError(f"checksum mismatch in {path}:{meta['key']}")
+        out[i] = arr
+    return out
+
+
+def restore_delta(ckpt_dir: str, template, step: Optional[int] = None,
+                  shardings=None) -> Optional[Tuple[Any, dict]]:
+    """Restore the newest publish (full or delta chain), like
+    ``restore_latest`` but delta-aware.
+
+    A delta at step k is resolved by walking ``base_step`` links until a
+    full snapshot, then re-applying each delta's changed leaves oldest →
+    newest.  The returned manifest is the requested snapshot's, augmented
+    with the merged invalidation view of the applied chain:
+
+    * ``"chain"``  — [{"step", "base_step", "touched"}] oldest → newest;
+    * ``"touched"`` — per-field union of the chain's touched row ids;
+    * ``"base_full_step"`` — the terminal full snapshot's step.
+
+    A consumer that last applied snapshot S can invalidate exactly the
+    union of touched sets for chain entries with step > S when S is one of
+    ``{base_full_step} ∪ chain steps`` — otherwise it must drop everything
+    (``EmbeddingServer.push`` implements that rule).
+
+    Unreadable/corrupted candidates (bad CRC, broken chain) are skipped,
+    falling back to the next-newest snapshot, mirroring ``restore_latest``.
+    """
+    if not os.path.isdir(ckpt_dir):
+        return None
+    snaps = _list_snapshots(ckpt_dir)[::-1]          # newest first
+    if step is not None:
+        snaps = [s for s in snaps if s[0] == step]
+    _, template_treedef = _flatten(template)
+    for snap_step, kind, d in snaps:
+        path = os.path.join(ckpt_dir, d)
+        try:
+            if kind == "full":
+                tree, manifest = _verify_and_load(path, template)
+                manifest = dict(manifest, delta=False, chain=[],
+                                touched=manifest.get("touched", {}),
+                                base_full_step=snap_step)
+            else:
+                # walk the base chain down to a full snapshot
+                chain = [(path, _load_manifest(path))]
+                while True:
+                    b = int(chain[-1][1]["base_step"])
+                    full_d = os.path.join(ckpt_dir, f"step-{b:010d}")
+                    delta_d = os.path.join(ckpt_dir, f"delta-{b:010d}")
+                    if os.path.isdir(full_d):
+                        base_path, base_full_step = full_d, b
+                        break
+                    if not os.path.isdir(delta_d):
+                        raise IOError(f"delta chain broken at step {b}")
+                    chain.append((delta_d, _load_manifest(delta_d)))
+                base_tree, _ = _verify_and_load(base_path, template)
+                leaves = _flatten(base_tree)[0]
+                merged: dict = {}
+                chain_meta = []
+                for dpath, dman in reversed(chain):   # oldest → newest
+                    if dman["n_leaves"] != len(leaves):
+                        raise IOError(f"leaf count mismatch in {dpath}")
+                    leaves = _apply_delta(leaves, dpath, dman)
+                    for fld, ids in dman.get("touched", {}).items():
+                        merged.setdefault(fld, set()).update(ids)
+                    chain_meta.append({"step": dman["step"],
+                                       "base_step": dman["base_step"],
+                                       "touched": dman.get("touched", {})})
+                tree = jax.tree.unflatten(template_treedef, leaves)
+                manifest = dict(chain[0][1], chain=chain_meta,
+                                touched={k: sorted(v)
+                                         for k, v in merged.items()},
+                                base_full_step=base_full_step)
+        except BaseException:
+            continue                         # corrupted/broken → try previous
+        if shardings is not None:
+            tree = _apply_shardings(tree, shardings)
+        return tree, manifest
+    return None

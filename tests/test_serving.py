@@ -378,6 +378,69 @@ def test_ctr_stream_topk_mass_concentrates(zipf, seed):
     assert mass >= 0.20, (zipf, seed, mass)
 
 
+@settings(max_examples=6, deadline=None)
+@given(period=st.sampled_from([8, 12]),
+       seed=st.integers(min_value=0, max_value=10 ** 6))
+def test_ctr_stream_drift_shifts_topk_mass(period, seed):
+    """With ``drift_period`` set, the hot head rotates between phases:
+    phase 0's top-10% hot set carries far less of phase 1's traffic than
+    of its own — the distribution shift online training exists to chase —
+    while each phase stays internally skewed (the cache still wins) and
+    ``batch_at`` stays pure in (seed, step)."""
+    cfg = CtrDataConfig(vocab_sizes=(4000,), batch_size=256,
+                        zipf_exponent=1.05, seed=seed, drift_period=period)
+    stream = CtrStream(cfg)
+
+    def phase_ids(phase):
+        return np.concatenate(
+            [stream.batch_at(phase * period + s)["sparse"][:, 0]
+             for s in range(period)])
+
+    k = max(1, int(0.10 * 4000))
+    ids0, ids1 = phase_ids(0), phase_ids(1)
+    vals, counts = np.unique(ids0, return_counts=True)
+    hot0 = vals[np.argsort(-counts)][:k]
+    own_mass = np.isin(ids0, hot0).mean()
+    cross_mass = np.isin(ids1, hot0).mean()
+    assert own_mass >= 0.20, (period, seed, own_mass)
+    assert cross_mass <= 0.5 * own_mass, (period, seed, own_mass, cross_mass)
+    # each phase is still zipf-skewed in its own right
+    c1 = np.sort(np.unique(ids1, return_counts=True)[1])[::-1]
+    assert c1[:k].sum() / c1.sum() >= 0.20
+    # determinism: the drifted batches are pure in (seed, step)
+    again = CtrStream(cfg).batch_at(period + 1)
+    np.testing.assert_array_equal(again["sparse"],
+                                  stream.batch_at(period + 1)["sparse"])
+
+
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10 ** 6))
+def test_sketch_hot_set_tracks_drift(seed):
+    """The serving-side consequence of drift: a frequency sketch fed
+    phase-1 traffic ranks phase-1's head far hotter than phase-0's — the
+    heat map follows the traffic, which is why ``HotRowCache.clear`` keeps
+    the sketch and re-converges in one warm pass."""
+    period = 10
+    stream = CtrStream(CtrDataConfig(vocab_sizes=(4000,), batch_size=256,
+                                     zipf_exponent=1.05, seed=seed,
+                                     drift_period=period))
+
+    def hot_set(phase):
+        ids = np.concatenate(
+            [stream.batch_at(phase * period + s)["sparse"][:, 0]
+             for s in range(period)])
+        vals, counts = np.unique(ids, return_counts=True)
+        return ids, vals[np.argsort(-counts)][:400]
+
+    _, hot0 = hot_set(0)
+    ids1, hot1 = hot_set(1)
+    sketch = CountMinSketch(width=1 << 14, depth=4, seed=0)
+    sketch.update(ids1)
+    e1 = sketch.estimate(hot1).mean()
+    e0 = sketch.estimate(hot0).mean()
+    assert e1 > 2 * e0, (seed, e0, e1)
+
+
 def test_ctr_stream_cache_capacity_fraction_captures_half():
     """At zipf 1.05 the hottest ~27% of rows carry ≥ half the mass — the
     sizing rule behind the 16k-row cache on the 40k-row serving vocab."""
