@@ -31,9 +31,10 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from benchmarks.common import BENCH_VOCABS, make_cfg, stamp_row
-from repro.data.synthetic_ctr import CtrDataConfig, CtrStream
+from repro.data.synthetic_ctr import CtrDataConfig, CtrStream, RequestStream
 from repro.models.recsys import forward, init_params, serve_scores
 
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
@@ -123,10 +124,26 @@ def serving_rows(fast: bool = False) -> list:
     scheduled push events — its extra columns (``pushes``,
     ``push_p50_ms``/``push_max_ms``, ``mean_staleness_s``) record the
     swap cost on the timeline and how stale the served model ran.
+
+    The ``+r{N}`` rows are the fleet cells (``serve.fleet.ReplicaFleet``):
+    one replica at the grid's offered load vs four replicas at 4× — the
+    r4 cell must shed no more than the r1 cell (replication really buys
+    capacity), with ``retried`` counting retry-on-replica saves.  The
+    ``+push-stag``/``+push-sync`` pair replays the same trace at ~90% of
+    the fleet's *measured* capacity with the same publishes rolled out
+    staggered (one replica swaps at a time) vs synchronized (all at
+    once); the p99 gap between them is the staggered rollout's whole
+    point.  Because that load deliberately rides measured capacity, the
+    pair's delivered throughput is machine-proportional — it is recorded
+    as ``delivered_qps`` (not ``qps``) to keep it out of check_bench's
+    30% throughput gate.
     """
+    import dataclasses
     import tempfile
 
-    from repro.serve.replay import (ReplayConfig, run_cell, run_grid,
+    from repro.serve.fleet import ReplicaFleet
+    from repro.serve.replay import (ReplayConfig, run_cell, run_fleet_cell,
+                                    run_fleet_push_cell, run_grid,
                                     run_push_cell)
     from repro.serve.server import EmbeddingServer, ServerConfig
     from repro.train.online import OnlineConfig, OnlineTrainer
@@ -142,6 +159,17 @@ def serving_rows(fast: bool = False) -> list:
                          ReplayConfig(n_requests=1024 if fast else 4096),
                          zipf=4.0, warm_batches=warm))
 
+    # fleet cells: replication as the scaling axis — one replica at the
+    # grid's offered load, four replicas at 4× of it
+    fleet_cfg = ServerConfig(vocab_sizes=SERVING_VOCABS,
+                             backends=("full",))
+    fleet1 = ReplicaFleet(fleet_cfg, n_replicas=1)
+    fleet4 = ReplicaFleet(fleet_cfg, n_replicas=4)
+    rows.append(run_fleet_cell(fleet1, "full", base, warm_batches=warm))
+    rows.append(run_fleet_cell(
+        fleet4, "full", dataclasses.replace(base, rate_hz=base.rate_hz * 4),
+        warm_batches=warm))
+
     # online push cell: train live on a drifting stream, replay drifting
     # traffic with the publishes hot-swapped in mid-replay
     n_steps = 24 if fast else 48
@@ -155,17 +183,69 @@ def serving_rows(fast: bool = False) -> list:
                          publish_every=max(1, n_steps // 3)))
         trainer.run(n_steps)
         server.reset_cache_stats()
+        push_steps = [p.step for p in trainer.publishes]
         push_row = run_push_cell(
-            server, "full", base, publish_dir=pub,
-            push_steps=[p.step for p in trainer.publishes],
+            server, "full", base, publish_dir=pub, push_steps=push_steps,
             drift_period=2, warm_batches=warm)
-    rows.append(dict(push_row, policy=push_row["policy"] + "+push"))
+        rows.append(dict(push_row, policy=push_row["policy"] + "+push"))
+
+        # staggered-vs-synchronized rollout on the same trace, offered
+        # ~90% of the fleet's measured capacity — the regime where a
+        # whole-fleet blackout visibly backs the queues up
+        push_cfg = dataclasses.replace(
+            base, rate_hz=_fleet_capacity_rate(fleet4, "full", base))
+        for staggered in (True, False):
+            cell = run_fleet_push_cell(
+                fleet4, "full", push_cfg, publish_dir=pub,
+                push_steps=push_steps, staggered=staggered,
+                warm_batches=warm)
+            cell["delivered_qps"] = cell.pop("qps")   # capacity-bound
+            mode = "stag" if staggered else "sync"
+            rows.append(dict(cell, policy=cell["policy"] + f"+push-{mode}"))
 
     out = []
     for r in rows:
-        name = f"serving/{r['backend']}+{r['policy']}-z{r['zipf']}"
+        rep = f"+r{r['n_replicas']}" if "n_replicas" in r else ""
+        name = f"serving/{r['backend']}+{r['policy']}{rep}-z{r['zipf']}"
         out.append(stamp_row({"name": name, **r}))
     return out
+
+
+def _fleet_capacity_rate(fleet, backend: str, cfg, frac: float = 0.85,
+                         probes: int = 3) -> float:
+    """Offered load at ``frac`` of the fleet's measured steady-state
+    capacity, so the push-comparison cells ride near saturation (where a
+    whole-fleet blackout hurts) without tipping into steady overload
+    (where nothing absorbs anything) on any host.
+
+    Two steps: a full-batch service probe gives an optimistic upper
+    bound (warm cache, max-width batch — real traffic does worse), then
+    a short replay offered that bound runs deliberately overloaded and
+    its *delivered* qps is the capacity under this policy/trace mix."""
+    import dataclasses
+
+    from repro.serve.replay import run_fleet_cell
+    from repro.serve.router import stack_and_pad
+
+    stream = RequestStream(CtrDataConfig(
+        vocab_sizes=SERVING_VOCABS, n_dense=fleet.cfg.n_dense,
+        batch_size=256, zipf_exponent=1.05, seed=3))
+    batch, nv = stack_and_pad(stream.requests(cfg.max_batch),
+                              cfg.max_batch)
+    fn = fleet.replicas[0].score_fn(backend)
+    fn(batch, n_valid=nv)                          # compile off the clock
+    best = min(_timed_call(fn, batch, nv) for _ in range(probes))
+    bound = len(fleet.replicas) * cfg.max_batch / best
+    cal = dataclasses.replace(cfg, n_requests=min(cfg.n_requests, 1024),
+                              rate_hz=bound)
+    return frac * run_fleet_cell(fleet, backend, cal,
+                                 warm_batches=8)["qps"]
+
+
+def _timed_call(fn, batch, nv) -> float:
+    t0 = time.perf_counter()
+    np.asarray(fn(batch, n_valid=nv))
+    return time.perf_counter() - t0
 
 
 def write_serving_json(rows: list, path: str = SERVING_JSON) -> None:

@@ -9,24 +9,32 @@ Three shapes:
 2. ``replay_policies`` — the virtual-clock traffic replay comparing the
    deadline policy against fixed-size batching at equal offered load
    (the measurement behind ``BENCH_serving.json``).
-3. ``retrieval`` — the one-query-vs-many two-tower shape.
+3. ``fleet_replay`` — a ``ReplicaFleet`` of three replicas behind one
+   admission path, replayed at 3x the single-server offered load on one
+   virtual clock, then a staggered-vs-synchronized model rollout on the
+   same trace (the fleet cells of ``BENCH_serving.json``).
+4. ``retrieval`` — the one-query-vs-many two-tower shape.
 
     PYTHONPATH=src python examples/serve_recsys.py
 """
 
 import asyncio
 import dataclasses
+import tempfile
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.data.synthetic_ctr import CtrDataConfig, RequestStream
+from repro.data.synthetic_ctr import CtrDataConfig, CtrStream, RequestStream
 from repro.models.recsys import RecsysConfig, init_params, serve_scores
 from repro.serve import AsyncRouter, DeadlineBatcher, RouterConfig
-from repro.serve.replay import ReplayConfig, run_cell
+from repro.serve.fleet import ReplicaFleet
+from repro.serve.replay import (ReplayConfig, run_cell, run_fleet_cell,
+                                run_fleet_push_cell)
 from repro.serve.server import EmbeddingServer, ServerConfig
+from repro.train.online import OnlineConfig, OnlineTrainer
 
 VOCABS = (12_000, 6_000, 18_000, 4_000)
 
@@ -82,6 +90,41 @@ def replay_policies(server: EmbeddingServer):
               f"hit_rate={row.get('hit_rate', 0):.0%}")
 
 
+def fleet_replay():
+    """Three replicas, one admission path, 3x the offered load."""
+    fleet = ReplicaFleet(ServerConfig(vocab_sizes=VOCABS,
+                                      backends=("full",)), n_replicas=3)
+    base = ReplayConfig(n_requests=1024, rate_hz=6000.0, deadline_s=0.025,
+                        max_batch=32)
+    row = run_fleet_cell(fleet, "full", base, warm_batches=32)
+    print(f"fleet r{row['n_replicas']}: p50={row['p50_ms']:.1f}ms "
+          f"p99={row['p99_ms']:.1f}ms qps={row['qps']:.0f} "
+          f"shed={row['shed']} retried={row['retried']} "
+          f"hit_rate={row.get('hit_rate', 0):.0%}")
+    # staggered rollout vs everyone-at-once: train a few publishes, then
+    # replay the same trace under both push policies.  Staggered drains
+    # each replica before its swap (one mid-rollout at a time, the rest
+    # serving), so no admitted request waits out a swap; synchronized
+    # takes the whole fleet down together and the p99 eats it.
+    with tempfile.TemporaryDirectory() as pub:
+        stream = CtrStream(CtrDataConfig(
+            vocab_sizes=VOCABS, n_dense=fleet.replicas[0].cfg.n_dense,
+            batch_size=256, seed=11))
+        trainer = OnlineTrainer(
+            fleet.replicas[0].recsys_config("full"), stream,
+            OnlineConfig(publish_dir=pub, publish_every=8))
+        trainer.run(24)
+        steps = [p.step for p in trainer.publishes]
+        for staggered in (True, False):
+            row = run_fleet_push_cell(
+                fleet, "full", base, publish_dir=pub, push_steps=steps,
+                staggered=staggered, warm_batches=32)
+            label = "staggered" if staggered else "synchronized"
+            print(f"fleet push {label:12s}: p50={row['p50_ms']:.1f}ms "
+                  f"p99={row['p99_ms']:.1f}ms miss={row['deadline_miss']} "
+                  f"pushes={row['pushes']}")
+
+
 def retrieval():
     cfg = RecsysConfig(
         name="retr", arch="two_tower", vocab_sizes=VOCABS * 2,
@@ -111,4 +154,5 @@ if __name__ == "__main__":
     server = build_server()
     async_router(server)
     replay_policies(server)
+    fleet_replay()
     retrieval()

@@ -8,11 +8,13 @@ scoring, and traffic replay.
   fetch-bound substrates via the ``cacheable_rows`` backend hook)
 * ``server``    — ``EmbeddingServer``: all four substrates resident, one
   jitted ``serve_scores`` each
-* ``replay``    — virtual-clock open-loop traffic replay; the measurement
-  harness behind ``BENCH_serving.json``
+* ``fleet``     — ``ReplicaFleet``: N replicas behind one admission path
+  (shed → retry-on-replica) with staggered model rollouts
+* ``replay``    — virtual-clock open-loop traffic replay (single server or
+  fleet); the measurement harness behind ``BENCH_serving.json``
 
-The light names are re-exported here; ``server``/``replay`` stay submodule
-imports (they pull in the full model stack).
+The light names are re-exported here; ``server``/``fleet``/``replay`` stay
+submodule imports (they pull in the full model stack).
 """
 
 from repro.serve.router import (AsyncRouter, DeadlineBatcher,   # noqa: F401

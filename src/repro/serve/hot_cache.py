@@ -118,6 +118,7 @@ class HotRowCache:
         self.backend, self.spec, self.params = backend, spec, params
         self.capacity = int(capacity)
         self.admit_threshold = int(admit_threshold)
+        self._sketch_seed = seed
         self.sketch = CountMinSketch(sketch_width, sketch_depth, seed)
         self._rows: Dict[int, np.ndarray] = {}
         self._offsets = spec.offsets.astype(np.int64)     # per-field
@@ -239,6 +240,20 @@ class HotRowCache:
                    for f, ids in (touched or {}).items())
 
     # -- bookkeeping --------------------------------------------------------
+
+    def reset(self) -> None:
+        """Full reset to the cold-start state: drop the resident store AND
+        the sketch heat (plus hit/miss counters), keeping only the
+        configuration (capacity, admit threshold, sketch geometry/seed,
+        backend/params binding).  ``clear`` deliberately preserves sketch
+        heat because a model push does not change the *traffic*; a
+        benchmark grid moving to a different traffic distribution must
+        reset both, or the previous cell's heat leaks into the next cell's
+        admission decisions (and its resident rows into the hit rate)."""
+        self._rows.clear()
+        self.sketch = CountMinSketch(self.sketch.width, self.sketch.depth,
+                                     self._sketch_seed)
+        self.reset_stats()
 
     def warm(self, id_batches) -> None:
         """Pre-heat sketch + store from prior traffic (e.g. the request

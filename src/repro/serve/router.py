@@ -139,11 +139,19 @@ class DeadlineBatcher:
     # -- close-out ---------------------------------------------------------
 
     def close_at(self) -> Optional[float]:
-        """Earliest time the current batch must dispatch (None: no work)."""
+        """Earliest time the current batch must dispatch (None: no work).
+
+        The deadline term ranges over only the first ``max_batch`` pending
+        requests — the FIFO prefix ``poll`` will actually ship.  A tight
+        deadline parked deeper in the queue cannot ride this batch, so
+        letting it force a premature close-out would shrink the batch
+        without helping the tight request at all (it drives the close-out
+        once it reaches the head of the queue).
+        """
         if not self._pending:
             return None
         t = self._pending[0].arrival + self.cfg.max_wait_s
-        deadlines = [r.deadline for r in self._pending
+        deadlines = [r.deadline for r in self._pending[:self.cfg.max_batch]
                      if r.deadline is not None]
         if deadlines:
             t = min(t, min(deadlines) - self.service_estimate
@@ -221,7 +229,17 @@ def stack_and_pad(features: Sequence[Dict[str, np.ndarray]],
     n = len(features)
     if n > batch_size:
         raise ValueError(f"{n} requests > batch_size {batch_size}")
-    keys = features[0].keys()
+    keys = list(features[0])
+    key_set = set(keys)
+    for j, f in enumerate(features[1:], start=1):
+        # extra keys would be dropped silently and missing ones would
+        # surface as a bare KeyError mid-np.stack — same clear contract
+        # MicroBatcher.submit promises at its door
+        if set(f) != key_set:
+            raise ValueError(
+                f"stack_and_pad: request {j} keys {sorted(f)} != the "
+                f"batch's keys {sorted(key_set)}; all requests in a batch "
+                f"must share the same feature keys")
     batch = {k: np.stack([np.asarray(f[k]) for f in features])
              for k in keys}
     if n < batch_size:

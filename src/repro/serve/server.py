@@ -271,3 +271,12 @@ class EmbeddingServer:
         for cache in self._caches.values():
             if cache is not None:
                 cache.reset_stats()
+
+    def reset_caches(self) -> None:
+        """Full cold-start reset of every resident cache — store, sketch
+        heat, and counters (``HotRowCache.reset``).  The benchmark grid
+        calls this between cells so no cell's traffic distribution leaks
+        into the next one's resident set or admission heat."""
+        for cache in self._caches.values():
+            if cache is not None:
+                cache.reset()

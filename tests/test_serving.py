@@ -625,3 +625,296 @@ def test_server_replay_cell_end_to_end(server):
     assert row["completed"] + row["shed"] == 512
     assert row["hit_rate"] >= 0.5, row
     assert row["p50_ms"] <= row["p99_ms"]
+
+
+# ---------------------------------------------------------------------------
+# satellite regressions (ISSUE 10)
+# ---------------------------------------------------------------------------
+
+def test_close_at_ignores_deadline_beyond_batch_prefix():
+    """A tight deadline parked at queue position >= max_batch must not
+    force a premature close-out of a batch that cannot contain it: poll
+    ships the FIFO prefix, so only the first max_batch pending requests'
+    deadlines may drive the close-out."""
+    b = DeadlineBatcher(_rc(max_batch=4, max_wait_s=0.050,
+                            init_service_s=0.002, close_margin_s=0.0))
+    for i in range(4):
+        b.admit({"x": np.float32([i])}, now=0.0)    # prefix: no deadlines
+    b.admit({"x": np.float32([4])}, now=0.0, deadline=0.005)  # parked deep
+    # buggy close-out was min(0.050, 0.005 - 0.002) = 0.003 — an early
+    # close-out scheduled for a batch that cannot carry the tight request
+    assert b.close_at() == pytest.approx(0.050)
+    out = b.poll(now=0.0)                           # ships on fill (4-wide)
+    assert [int(r.features["x"][0]) for r in out] == [0, 1, 2, 3]
+    # now the tight request heads the queue and legitimately drives it
+    assert b.close_at() == pytest.approx(0.005 - b.service_estimate)
+
+
+def test_stack_and_pad_rejects_mismatched_keys():
+    """Extra keys were silently dropped and missing keys surfaced as a
+    bare KeyError mid-stack; both must be the clear ValueError contract
+    MicroBatcher.flush promises."""
+    a = {"dense": np.float32([1.0]), "sparse": np.int64([2])}
+    missing = {"dense": np.float32([3.0])}
+    extra = dict(a, emb=np.float32([4.0]))
+    with pytest.raises(ValueError, match="share the same feature keys"):
+        stack_and_pad([a, missing], 4)
+    with pytest.raises(ValueError, match="share the same feature keys"):
+        stack_and_pad([a, extra], 4)
+    batch, n = stack_and_pad([a, dict(a)], 4)       # equal keys still fine
+    assert n == 2 and set(batch) == {"dense", "sparse"}
+
+
+def test_replay_all_shed_reports_makespan_not_zero():
+    """When every request sheds, the old report forced makespan_s to 0.0
+    even though the trace spanned time and fired pushes occupied the
+    server; qps stays 0 but the timeline must be honest."""
+    from repro.serve.replay import ReplayConfig, replay, synthetic_service
+    cfg = ReplayConfig(n_requests=64, rate_hz=1000.0, deadline_s=0.001,
+                       max_batch=8, init_service_s=0.005)
+    reqs = _mini_requests(64)
+    arr = poisson_arrivals(cfg.rate_hz, 64, seed=4)
+    pushed = []
+    rep = replay(synthetic_service(base_s=0.005), reqs, arr, cfg,
+                 events=[(0.010, lambda: pushed.append(1))])
+    assert rep.shed == 64 and rep.completed == 0
+    assert pushed == [1] and rep.pushes == 1
+    assert rep.makespan_s >= float(arr[-1])         # was 0.0
+    assert rep.qps == 0.0
+    assert rep.offered_qps == pytest.approx(64 / float(arr[-1]))
+
+
+def test_replay_single_request_trace_no_zero_division():
+    """A 1-request trace arriving at t=0 used to divide offered_qps by
+    arrivals[-1] == 0.0."""
+    from repro.serve.replay import ReplayConfig, replay, synthetic_service
+    cfg = ReplayConfig(n_requests=1, rate_hz=1000.0, deadline_s=None,
+                       max_batch=4, max_wait_s=0.010)
+    reqs = _mini_requests(1)
+    rep = replay(synthetic_service(), reqs, np.asarray([0.0]), cfg)
+    assert rep.completed == 1 and rep.shed == 0
+    assert rep.offered_qps == 0.0                   # guarded, not inf/raise
+    assert rep.makespan_s > 0.0 and rep.qps > 0.0
+
+
+def test_run_grid_cell_order_independent(server):
+    """Cache state must not leak across grid cells: the z4.0 low-skew
+    control's hit rate was polluted by z1.05 heat when cells only reset
+    stats.  With the full per-cell HotRowCache.reset (store + sketch) the
+    grid commutes — same rows whichever order the zipf cells run."""
+    import dataclasses as dc
+    from repro.serve.replay import ReplayConfig, run_grid
+    cache = server.cache("full")
+
+    def svc(batch, n_valid):
+        cache.lookup(batch["sparse"], n_valid)      # deterministic traffic
+        return 1e-3
+
+    base = ReplayConfig(n_requests=192, rate_hz=2000.0, max_batch=16)
+    kw = dict(policies=("deadline",), backends=("full",), base=base,
+              warm_batches=12, service=svc)
+    ab = run_grid(server, zipfs=(1.05, 4.0), **kw)
+    ba = run_grid(server, zipfs=(4.0, 1.05), **kw)
+    key = lambda r: r["zipf"]                        # noqa: E731
+    assert sorted(ab, key=key) == sorted(ba, key=key)
+    by_zipf = {r["zipf"]: r for r in ab}
+    assert by_zipf[1.05]["hit_rate"] > by_zipf[4.0]["hit_rate"]
+
+
+# ---------------------------------------------------------------------------
+# the replica fleet (deterministic clocks throughout)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def fleet():
+    from repro.serve.fleet import ReplicaFleet
+    from repro.serve.server import ServerConfig
+    return ReplicaFleet(ServerConfig(
+        vocab_sizes=VOCABS, embed_dim=8, n_dense=4, bot_mlp=(16, 8),
+        top_mlp=(16, 1), backends=("full",), robe_compression=100,
+        cache_capacity=16384), n_replicas=3)
+
+
+def test_fleet_scores_equal_single_server(server, fleet):
+    """Replicas share one trained model: every replica's scores (and the
+    fleet's least-dispatched routing) are array-equal to the single
+    server's on identical traffic."""
+    for step in range(3):
+        batch = _server_batch(n=16, step=step)
+        want = server.score("full", batch, use_cache=False)
+        for r in range(len(fleet)):
+            got = fleet.score("full", batch, replica=r, use_cache=False)
+            np.testing.assert_array_equal(got, want)
+        np.testing.assert_array_equal(
+            fleet.score("full", batch, use_cache=False), want)
+
+
+def test_fleet_admission_retries_on_replica_shed():
+    """The one admission path: the least-loaded replica sheds (its own
+    service estimate makes the deadline infeasible) and the request is
+    delivered by the next replica instead of being dropped."""
+    from repro.serve.fleet import ReplicaFleet
+    from repro.serve.server import ServerConfig
+    fl = ReplicaFleet(ServerConfig(vocab_sizes=(64, 64), embed_dim=4,
+                                   n_dense=2, bot_mlp=(8, 4), top_mlp=(8, 1),
+                                   backends=("full",), cache_capacity=0),
+                      n_replicas=2)
+    slow = DeadlineBatcher(_rc(init_service_s=0.020))   # replica 0: sheds
+    fast = DeadlineBatcher(_rc(init_service_s=0.001))   # replica 1: admits
+    got = fl.admit([slow, fast], {"x": np.float32([0])}, now=0.0,
+                   deadline=0.010)
+    assert got == 1 and len(slow) == 0 and len(fast) == 1
+    # terminal only when EVERY replica sheds
+    with pytest.raises(LoadShedError, match="all_replicas_shed"):
+        fl.admit([slow, fast], {"x": np.float32([1])}, now=0.0,
+                 deadline=0.0001)
+    assert fl.admit([slow, fast], {"x": np.float32([2])}, now=0.0) == 0
+
+
+def test_fleet_replay_counts_retries_and_delivers():
+    """Replay-level retry-on-replica: replica 0's pessimistic service
+    estimate sheds every admission it is offered first; replica 1 serves
+    the whole trace, and the report counts the saves."""
+    from repro.serve.replay import ReplayConfig, replay, synthetic_service
+    cfg = ReplayConfig(n_requests=128, rate_hz=2000.0, deadline_s=0.010,
+                       max_batch=16)
+    reqs = _mini_requests(128)
+    arr = poisson_arrivals(cfg.rate_hz, 128, seed=6)
+    batchers = [DeadlineBatcher(_rc(max_batch=16, init_service_s=0.050)),
+                DeadlineBatcher(_rc(max_batch=16, init_service_s=0.001))]
+    rep = replay(synthetic_service(base_s=0.001, per_row_s=1e-5),
+                 reqs, arr, cfg, n_replicas=2, batchers=batchers)
+    assert rep.shed == 0 and rep.completed == 128
+    assert rep.retried > 0                          # saved by the retry
+    assert rep.replica_batches[0] == 0              # replica 0 never won
+    assert rep.replica_batches[1] == rep.batches
+
+
+def test_fleet_replay_matches_single_server_at_one_replica():
+    """n_replicas=1 must degenerate to the single-server replay exactly
+    (same batcher default, same timeline, same report fields)."""
+    from repro.serve.replay import ReplayConfig, replay, synthetic_service
+    cfg = ReplayConfig(n_requests=256, rate_hz=2000.0, deadline_s=0.025,
+                       max_batch=32)
+    reqs = _mini_requests(256)
+    arr = poisson_arrivals(cfg.rate_hz, 256, seed=1)
+    one = replay(synthetic_service(), reqs, arr, cfg)
+    fleet_one = replay(None, reqs, arr, cfg, n_replicas=1,
+                       services=[synthetic_service()])
+    assert one == fleet_one
+    # fleet diagnostics never leak into the serialized row
+    row = one.as_row()
+    for k in ("n_replicas", "retried", "replica_batches", "push_log"):
+        assert k not in row
+
+
+def test_fleet_replay_spreads_load_and_beats_single_p99():
+    """Four replicas at a load that saturates one server: the fleet
+    completes everything the single server shed, spreads batches across
+    replicas, and pulls p99 down."""
+    from repro.serve.replay import ReplayConfig, replay, synthetic_service
+    cfg = ReplayConfig(n_requests=512, rate_hz=8000.0, deadline_s=None,
+                       max_batch=16, max_queue=32, max_wait_s=0.004)
+    reqs = _mini_requests(512)
+    arr = poisson_arrivals(cfg.rate_hz, 512, seed=3)
+    svc = synthetic_service(base_s=0.008)
+    one = replay(svc, reqs, arr, cfg)
+    four = replay(svc, reqs, arr, cfg, n_replicas=4)
+    assert one.shed > 0                             # one server drowns
+    assert four.shed == 0 and four.completed == 512
+    assert four.p99_ms < one.p99_ms
+    assert all(b > 0 for b in four.replica_batches)
+
+
+def _busy_push(seconds):
+    """A push fn with a real, roughly known wall cost (no sleeping on any
+    harness clock — the replay measures the fn's own wall time)."""
+    import time as _time
+
+    def fn():
+        t0 = _time.perf_counter()
+        while _time.perf_counter() - t0 < seconds:
+            pass
+
+    return fn
+
+
+def test_staggered_rollout_never_overlaps_swaps():
+    """The staggered-push invariant, on the virtual timeline: swap k+1
+    starts at swap k's measured end, so no two replicas are ever mid-swap
+    in the same virtual instant — and the other replicas keep dispatching
+    while one swaps."""
+    from repro.serve.replay import ReplayConfig, replay, synthetic_service
+    cfg = ReplayConfig(n_requests=512, rate_hz=4000.0, deadline_s=None,
+                       max_batch=16, max_wait_s=0.004)
+    reqs = _mini_requests(512)
+    arr = poisson_arrivals(cfg.rate_hz, 512, seed=5)
+    rollout = (0.030, [(r, _busy_push(0.002)) for r in range(3)])
+    rep = replay(synthetic_service(), reqs, arr, cfg, n_replicas=3,
+                 events=[rollout])
+    assert rep.pushes == 3 and len(rep.push_log) == 3
+    order = [e[0] for e in rep.push_log]
+    assert order == [0, 1, 2]                       # rollout order held
+    for (_, _, _, end_prev), (_, _, start, _) in zip(rep.push_log,
+                                                     rep.push_log[1:]):
+        assert start >= end_prev                    # never two mid-swap
+    assert all(b > 0 for b in rep.replica_batches)  # fleet kept serving
+    # synchronized control: all three swaps anchored at the same instant
+    sync = [(0.030, _busy_push(0.002), r) for r in range(3)]
+    rep2 = replay(synthetic_service(), reqs, arr, cfg, n_replicas=3,
+                  events=sync)
+    assert rep2.pushes == 3
+    assert all(t == 0.030 for _, t, _, _ in rep2.push_log)
+
+
+def test_fleet_staggered_push_cache_parity(tmp_path):
+    """After a staggered push_all, every replica sits on the same publish
+    step, replica scores agree array-exactly, and each replica's hot
+    cache is bit-exact against its own uncached path."""
+    from repro.data.synthetic_ctr import CtrDataConfig as CDC
+    from repro.data.synthetic_ctr import CtrStream as CS
+    from repro.serve.fleet import ReplicaFleet
+    from repro.serve.server import ServerConfig
+    from repro.train.online import OnlineConfig, OnlineTrainer
+    vocabs = (1200, 600, 1800)
+    pub = str(tmp_path / "pub")
+    fl = ReplicaFleet(ServerConfig(
+        vocab_sizes=vocabs, embed_dim=8, n_dense=4, bot_mlp=(16, 8),
+        backends=("full",), cache_capacity=4096, model_dir=pub),
+        n_replicas=3)
+    stream = CS(CDC(vocab_sizes=vocabs, n_dense=4, batch_size=64,
+                    drift_period=10, seed=5))
+    tr = OnlineTrainer(fl.replicas[0].recsys_config("full"), stream,
+                       OnlineConfig(publish_dir=pub, publish_every=8,
+                                    full_every=10))
+    tr.run(24)
+    reports = fl.push_all("full", step=0)           # baseline full push
+    assert [p.kind for p in reports] == ["full"] * 3
+    fl.warm_caches([stream.batch_at(i)["sparse"] for i in range(6)])
+    reports = fl.push_all("full", step=24)          # staggered delta chain
+    assert [p.kind for p in reports] == ["delta"] * 3
+    assert fl.pushed_steps("full") == [24, 24, 24]
+    b = stream.batch_at(999)
+    batch = {"dense": b["dense"], "sparse": b["sparse"]}
+    want = fl.replicas[0].score("full", batch, use_cache=False)
+    for rep in fl.replicas:                         # per-replica parity
+        np.testing.assert_array_equal(
+            rep.score("full", batch, use_cache=True), want)
+        np.testing.assert_array_equal(
+            rep.score("full", batch, use_cache=False), want)
+
+
+def test_fleet_cell_row_shape(fleet):
+    """run_fleet_cell's BENCH row: explicit n_replicas/retried columns,
+    fleet-pooled hit rate, and the plain-cell schema otherwise."""
+    from repro.serve.replay import ReplayConfig, run_fleet_cell
+    fleet.reset_caches()
+    row = run_fleet_cell(fleet, "full",
+                         ReplayConfig(n_requests=256, rate_hz=4000.0,
+                                      deadline_s=0.025, max_batch=32),
+                         zipf=1.05, warm_batches=16)
+    assert row["n_replicas"] == 3
+    assert row["completed"] + row["shed"] == 256
+    for k in ("retried", "hit_rate", "cache_resident", "p99_ms", "qps"):
+        assert k in row, k
+    assert "push_log" not in row and "replica_batches" not in row
